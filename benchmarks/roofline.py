@@ -1,0 +1,77 @@
+"""Roofline table reader: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (all three terms per cell, dominant
+bottleneck, MODEL_FLOPS ratio, and the derived roofline fraction)."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, "src")
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "baseline") -> List[Dict]:
+    rows = []
+    for f in sorted(RESULTS.glob(f"*--{tag}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def table(tag: str = "baseline", multi_pod: bool = False) -> str:
+    rows = [r for r in load(tag) if r["multi_pod"] == multi_pod]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    mesh = "2x16x16 (512)" if multi_pod else "16x16 (256)"
+    out = [f"### Mesh {mesh}, tag `{tag}`", "",
+           "| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio | roofline frac | status |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                       f"| - | {r['status']}: "
+                       f"{r.get('reason', r.get('error', ''))[:60]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | ok |")
+    return "\n".join(out)
+
+
+def summary(tag: str = "baseline") -> Dict:
+    rows = load(tag)
+    ok = [r for r in rows if r["status"] == "ok"]
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(r["status"] == "skipped" for r in rows),
+        "cells_error": sum(r["status"] == "error" for r in rows),
+        "dominant_counts": {
+            d: sum(r["dominant"] == d for r in ok)
+            for d in ("compute", "memory", "collective")},
+        "worst_fraction": min(
+            (r for r in ok if not r["multi_pod"]),
+            key=lambda r: r["roofline_fraction"], default=None) and
+        min((f"{r['arch']}/{r['shape']}", r["roofline_fraction"])
+            for r in ok if not r["multi_pod"]
+            ) if ok else None,
+    }
+
+
+def run(report):
+    s = summary()
+    print(f"[roofline] cells ok={s['cells_ok']} "
+          f"skipped={s['cells_skipped']} error={s['cells_error']} "
+          f"dominant={s['dominant_counts']}")
+    report("roofline/summary", s)
+
+
+if __name__ == "__main__":
+    print(table(multi_pod=False))
+    print()
+    print(table(multi_pod=True))

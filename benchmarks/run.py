@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/claim.
+
+  compression       -> Table 4 (1M ints + meter data)
+  cstore_queries    -> Table 3 (7-query workload, 2 execution models)
+  encoded_exec      -> §6.1 operate-on-encoded-data ablation
+  tuple_mover_bench -> §4 ingest/merge behaviour
+  distribution      -> §3.6/§6.2 join locality decisions + Send/Recv
+  roofline          -> §Roofline reader over results/dryrun/
+
+Writes results/bench/<name>.json and prints a summary per benchmark.
+Usage: PYTHONPATH=src python -m benchmarks.run [name ...]
+"""
+import json
+import pathlib
+import sys
+import time
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def main() -> None:
+    from benchmarks import (compression, cstore_queries, distribution,
+                            encoded_exec, roofline, tuple_mover_bench)
+    mods = {
+        "compression": compression,
+        "cstore_queries": cstore_queries,
+        "encoded_exec": encoded_exec,
+        "tuple_mover_bench": tuple_mover_bench,
+        "distribution": distribution,
+        "roofline": roofline,
+    }
+    names = sys.argv[1:] or list(mods)
+    OUT.mkdir(parents=True, exist_ok=True)
+    results = {}
+    prev = OUT / "results.json"
+    if prev.exists():  # merge: partial runs must not clobber other tables
+        results.update(json.loads(prev.read_text()))
+
+    def report(key, value):
+        results[key] = value
+
+    for name in names:
+        print(f"===== {name} =====", flush=True)
+        t0 = time.time()
+        mods[name].run(report)
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====",
+              flush=True)
+    (OUT / "results.json").write_text(json.dumps(results, indent=1,
+                                                 default=str))
+    print(f"[run] wrote {OUT/'results.json'}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,70 @@
+"""Fault-tolerance mechanisms, end to end (DESIGN.md §3 integration):
+
+  1. K-safe checkpoint -> lose a node -> restore its shard from the buddy
+  2. gradient quorum commit with a straggler (paper's no-2PC quorum)
+  3. int8-compressed gradient all-reduce (paper §3.4 encodings on the wire)
+  4. elastic re-split of the global batch when a rank dies
+
+Run: PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import build_model
+from repro.train.checkpoint import (CheckpointStore, shard_state,
+                                    unshard_state)
+from repro.train.fault_tolerance import (DPSimulator, compressed_allreduce,
+                                         quorum_combine)
+from repro.train.train_step import init_train_state, make_train_step
+
+cfg = ArchConfig(name="demo", family="dense", n_layers=2, d_model=128,
+                 n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
+                 head_dim=32)
+model = build_model(cfg, tp=1)
+state = init_train_state(model, jax.random.key(0))
+step = jax.jit(make_train_step(model, RunConfig(total_steps=10,
+                                                warmup_steps=1)))
+rng = np.random.default_rng(0)
+tok = jnp.asarray(rng.integers(0, 512, (8, 64)), jnp.int32)
+batch = {"tokens": tok, "labels": tok}
+state, m = step(state, batch)
+print(f"[1] trained a step: loss {float(m['loss']):.3f}")
+
+# --- K-safe checkpoint + buddy restore ---
+with tempfile.TemporaryDirectory() as d:
+    ck = CheckpointStore(d, n_shards=4)
+    np_state = jax.tree.map(np.asarray, state)
+    for s in range(4):
+        ck.save_shard(1, s, shard_state(np_state, s, 4))
+    ck.commit_epoch(1)
+    shards = [ck.restore_shard(1, s, shard_state(np_state, s, 4),
+                               lost_nodes=(2,)) for s in range(4)]
+    restored = unshard_state(shards, np_state)
+    ok = all(np.array_equal(a, b) for a, b in
+             zip(jax.tree.leaves(restored), jax.tree.leaves(np_state)))
+    print(f"[1] node 2 lost -> restored from buddy copies: exact={ok}")
+
+# --- quorum gradients with a straggler ---
+g = jax.tree.map(np.asarray, jax.grad(model.loss)(state["params"], batch))
+combined, n_live = quorum_combine([g, g, None, g])
+print(f"[2] gradient quorum: {n_live}/4 ranks contributed; step commits")
+
+# --- compressed all-reduce ---
+avg = compressed_allreduce([g, g, g, g])
+err = max(float(np.abs(a - b).max() / (np.abs(b).max() + 1e-9))
+          for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(g)))
+print(f"[3] int8 gradient all-reduce: 4x fewer wire bytes, "
+      f"max rel err {err:.4f}")
+
+# --- elastic batch re-split ---
+sim = DPSimulator(4)
+parts = sim.split_batch({"x": np.arange(64)})
+sim.fail(1)
+parts2 = sim.split_batch({"x": np.arange(64)})
+sizes = [len(p["x"]) if p else 0 for p in parts2]
+print(f"[4] elastic: rank sizes after failure {sizes} "
+      f"(global batch preserved: {sum(sizes)})")

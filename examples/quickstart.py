@@ -1,0 +1,64 @@
+"""Quickstart: the Vertica-in-JAX analytic core in ~60 lines.
+
+Creates a 4-node cluster, loads a small star schema, and runs queries
+showing projections, encodings, SMA pruning, snapshot isolation and
+K-safety. Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
+from repro.core.recovery import recover_node
+from repro.engine import JoinSpec, Query, col, execute
+
+rng = np.random.default_rng(0)
+db = VerticaDB(n_nodes=4, k_safety=1, block_rows=1024)
+
+db.create_table(
+    TableSchema("sales", (ColumnDef("sale_id"), ColumnDef("cid"),
+                          ColumnDef("date"),
+                          ColumnDef("price", SQLType.FLOAT))),
+    sort_order=("date",), segment_by=("sale_id",),
+    partition_by=("date", "div_1000"))
+
+n = 100_000
+t = db.begin(direct_to_ros=True)
+db.insert(t, "sales", {
+    "sale_id": np.arange(n), "cid": rng.integers(0, 500, n),
+    "date": np.sort(rng.integers(0, 3000, n)),
+    "price": np.round(rng.normal(100, 15, n), 2)})
+epoch = db.commit(t)
+rep = db.storage_report()["sales_super"]
+print(f"loaded {n:,} rows -> {rep['containers']} ROS containers, "
+      f"compression {rep['ratio']:.1f}x (plus a K-safe buddy projection)")
+
+# filtered aggregate: the scan prunes blocks via per-block min/max (SMA)
+q = Query("sales", predicate=(col("date") >= 1000) & (col("date") < 1100),
+          group_by="cid", aggs=(("n", "cid", "count"),
+                                ("total", "price", "sum")))
+out, stats = execute(db, q)
+print(f"query: {len(out['cid'])} groups; pruned "
+      f"{stats.blocks_pruned}/{stats.blocks_total} blocks; "
+      f"groupby={stats.groupby_algorithm}; {stats.wall_s*1e3:.1f}ms")
+
+# MVCC: deletes never block readers; old snapshots stay queryable
+t = db.begin()
+db.delete(t, "sales", lambda r: r["cid"] < 100)
+e2 = db.commit(t)
+now = len(db.read_table("sales")["cid"])
+before = len(db.read_table("sales", as_of=e2 - 1)["cid"])
+print(f"after delete: {now:,} rows; snapshot@{e2-1}: {before:,} rows")
+
+# K-safety: take a node down; queries route through buddy projections
+ref, _ = execute(db, q)     # post-delete reference
+db.fail_node(2)
+out2, _ = execute(db, q)
+assert np.array_equal(np.sort(ref["cid"]), np.sort(out2["cid"]))
+print("node 2 down: identical results via buddy projection")
+recover_node(db, 2)
+print("node 2 recovered (epoch-based incremental replay)")
+
+# fast bulk delete: drop a whole partition (file unlink, no delete vectors)
+db.run_tuple_mover(force_moveout=True)
+db.drop_partition("sales", 0)
+print(f"dropped partition 0: {len(db.read_table('sales')['cid']):,} rows "
+      f"remain (min date {db.read_table('sales')['date'].min()})")

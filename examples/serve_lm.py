@@ -1,0 +1,15 @@
+"""Batched serving demo: prefill + KV-cache decode (optionally int8 KV),
+the small-scale twin of the decode_32k / long_500k dry-run cells.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--arch hymba-1.5b]
+"""
+import sys
+
+if "--arch" not in " ".join(sys.argv):
+    sys.argv += ["--arch", "qwen3-4b"]
+sys.argv += ["--batch", "4", "--prompt-len", "64", "--tokens", "32"]
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end LM training through the columnar token store: ~10M-param
+model, a few hundred steps, K-safe checkpoints, failure injection + replay.
+
+This is the small-scale twin of the production path the multi-pod dry-run
+compiles (launch/dryrun.py); the step function and substrate are identical.
+
+Run: PYTHONPATH=src python examples/train_lm.py            (fast demo)
+     PYTHONPATH=src python examples/train_lm.py --full     (~100M params)
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (
+    ["--d-model", "512", "--layers", "8", "--vocab", "8192",
+     "--steps", "300", "--batch", "8", "--seq", "256",
+     "--n-docs", "512", "--doc-len", "512", "--ckpt-every", "100"]
+    if "--full" in sys.argv else
+    ["--d-model", "192", "--layers", "4", "--vocab", "2048",
+     "--steps", "120", "--batch", "8", "--seq", "128",
+     "--fail-at-step", "90", "--ckpt-every", "40"])
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

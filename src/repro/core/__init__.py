@@ -1,0 +1,27 @@
+"""Vertica-in-JAX core: projections, encodings, storage, MVCC, K-safety.
+
+The paper's §3-§5 as a library: see DESIGN.md for the architecture map.
+"""
+from .catalog import Catalog
+from .database import AvailabilityError, NodeState, Txn, VerticaDB
+from .encodings import EncodedColumn, Encoding, decode_jnp, encode
+from .epochs import EpochManager
+from .locks import COMPATIBLE, CONVERT, MODES, LockError, LockManager
+from .partitioning import partition_keys
+from .projection import (PrejoinSpec, ProjectionDef, super_projection)
+from .segmentation import SegmentationSpec, hash_columns, rebalance_plan
+from .sma import ColumnSMA
+from .storage import DeleteVector, ROSContainer, WOS
+from .tuple_mover import ProjectionStore, mergeout, moveout, run_tuple_mover
+from .types import BLOCK_ROWS, ColumnDef, SQLType, TableSchema
+
+__all__ = [
+    "AvailabilityError", "BLOCK_ROWS", "COMPATIBLE", "CONVERT", "Catalog",
+    "ColumnDef", "ColumnSMA", "DeleteVector", "EncodedColumn", "Encoding",
+    "EpochManager", "LockError", "LockManager", "MODES", "NodeState",
+    "PrejoinSpec", "ProjectionDef", "ProjectionStore", "ROSContainer",
+    "SQLType", "SegmentationSpec", "TableSchema", "Txn", "VerticaDB", "WOS",
+    "decode_jnp", "encode", "hash_columns", "mergeout", "moveout",
+    "partition_keys", "rebalance_plan", "run_tuple_mover",
+    "super_projection",
+]

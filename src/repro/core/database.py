@@ -1,0 +1,439 @@
+"""The database facade: a simulated shared-nothing cluster with the paper's
+transaction, distribution and availability semantics.
+
+* N logical nodes, each holding per-projection physical state
+  (WOS + ROS containers + delete vectors).
+* Quorum commit without 2PC (paper §5): a commit succeeds iff >= N/2+1
+  nodes are up; nodes that miss a commit are marked stale and must recover.
+* K-safety (paper §5.3): every segmented projection gets a ring-offset
+  buddy; reads route around down nodes via buddies; losing every replica of
+  a segment (or quorum) shuts the database down.
+* Inserts are transactional: data is staged per txn and becomes a WOS (or
+  direct-ROS) write only at commit, with the commit epoch -- rollback simply
+  discards the staging, exactly the paper's 'discard ROS/WOS created by the
+  transaction'.
+* Deletes create delete vectors; UPDATE = DELETE + INSERT. No in-place
+  modification anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .catalog import Catalog, TableEntry
+from .epochs import EpochManager
+from .locks import LockManager
+from .projection import ProjectionDef, super_projection
+from .segmentation import SegmentationSpec
+from .storage import DeleteVector, ROSContainer, WOS
+from .tuple_mover import (ProjectionStore, mergeout, moveout,
+                          run_tuple_mover)
+from .types import SQLType, TableSchema
+
+_txn_ids = itertools.count(1)
+
+
+class AvailabilityError(Exception):
+    """Quorum lost or a segment has no live replica: database shutdown."""
+
+
+class TxnError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class NodeState:
+    id: int
+    up: bool = True
+    stores: Dict[str, ProjectionStore] = dataclasses.field(
+        default_factory=dict)
+    # commits missed while down (drives recovery)
+    stale_since: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Txn:
+    id: str
+    # (projection, node) -> staged row dict
+    staged: Dict[Tuple[str, int], Dict[str, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    staged_segments: Dict[Tuple[str, int], np.ndarray] = \
+        dataclasses.field(default_factory=dict)
+    deletes: List[Tuple[str, Callable]] = dataclasses.field(
+        default_factory=list)
+    direct_to_ros: bool = False
+
+
+class VerticaDB:
+    def __init__(self, n_nodes: int = 4, k_safety: int = 1,
+                 block_rows: int = 256):
+        assert k_safety in (0, 1)
+        self.catalog = Catalog(n_nodes=n_nodes, k_safety=k_safety)
+        self.nodes = [NodeState(i) for i in range(n_nodes)]
+        self.epochs = EpochManager()
+        self.locks = LockManager()
+        self.block_rows = block_rows
+
+    # ------------------------------------------------------------- DDL --
+
+    def create_table(self, schema: TableSchema, *,
+                     sort_order: Optional[Sequence[str]] = None,
+                     segment_by: Optional[Sequence[str]] = None,
+                     partition_by: Optional[Tuple[str, str]] = None):
+        self.catalog.add_table(schema, partition_by)
+        cols = schema.column_names()
+        sp = super_projection(schema, tuple(sort_order or cols[:1]),
+                              tuple(segment_by or ()))
+        self.create_projection(sp)
+
+    def create_projection(self, proj: ProjectionDef, *,
+                          populate: bool = False):
+        self.catalog.add_projection(proj)
+        self._init_stores(proj)
+        buddy = None
+        if self.catalog.k_safety >= 1 and not proj.segmentation.replicated \
+                and proj.buddy_of is None:
+            buddy = proj.buddy_def()
+            self.catalog.add_projection(buddy)
+            self._init_stores(buddy)
+        if populate:
+            from .recovery import refresh_projection
+            refresh_projection(self, proj.name)
+            if buddy is not None:
+                refresh_projection(self, buddy.name)
+
+    def _init_stores(self, proj: ProjectionDef):
+        for node in self.nodes:
+            node.stores[proj.name] = ProjectionStore(proj, WOS(proj.name))
+
+    # ------------------------------------------------------------- txn --
+
+    def begin(self, *, direct_to_ros: bool = False) -> Txn:
+        return Txn(f"txn{next(_txn_ids)}", direct_to_ros=direct_to_ros)
+
+    def _sql_types(self, proj: ProjectionDef) -> Dict[str, SQLType]:
+        schema = self.catalog.tables[proj.anchor].schema
+        out = {}
+        for c in proj.columns:
+            if c in schema:
+                out[c] = schema.column(c).sql_type
+            else:  # prejoined dimension column
+                out[c] = SQLType.INT
+        return out
+
+    def insert(self, txn: Txn, table: str, data: Dict[str, np.ndarray]):
+        """Stage rows for every projection of the table (lock mode I)."""
+        self.locks.acquire(table, txn.id, "I")
+        n = len(next(iter(data.values())))
+        for proj in self.catalog.projections_of(table):
+            pdata = self._project_rows(proj, data)
+            if proj.segmentation.replicated:
+                placements = [(node.id, np.zeros(n, np.int32))
+                              for node in self.nodes]
+                sel_all = np.ones(n, bool)
+                for node_id, segs in placements:
+                    self._stage(txn, proj.name, node_id, pdata, sel_all,
+                                segs)
+            else:
+                nodes, segs = proj.segmentation.place(
+                    pdata, self.catalog.n_nodes)
+                for node_id in np.unique(nodes):
+                    sel = nodes == node_id
+                    self._stage(txn, proj.name, int(node_id), pdata, sel,
+                                segs[sel])
+
+    def _project_rows(self, proj: ProjectionDef,
+                      data: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        if proj.prejoin is None:
+            return {c: np.asarray(data[c]) for c in proj.columns}
+        # prejoin projection: join fact rows with the dimension table at load
+        pj = proj.prejoin
+        dim = self.read_table(pj.dim_table)
+        keys = np.asarray(dim[pj.dim_key])
+        order = np.argsort(keys)
+        idx = order[np.searchsorted(keys[order], np.asarray(
+            data[pj.anchor_key]))]
+        out = {}
+        for c in proj.columns:
+            if "." in c:
+                dcol = c.split(".", 1)[1]
+                out[c] = np.asarray(dim[dcol])[idx]
+            else:
+                out[c] = np.asarray(data[c])
+        return out
+
+    def _stage(self, txn: Txn, proj: str, node_id: int,
+               data: Dict[str, np.ndarray], sel: np.ndarray,
+               segs: np.ndarray):
+        key = (proj, node_id)
+        sub = {c: v[sel] for c, v in data.items()}
+        if key in txn.staged:
+            txn.staged[key] = {c: np.concatenate([txn.staged[key][c],
+                                                  sub[c]]) for c in sub}
+            txn.staged_segments[key] = np.concatenate(
+                [txn.staged_segments[key], segs])
+        else:
+            txn.staged[key] = sub
+            txn.staged_segments[key] = segs
+
+    def delete(self, txn: Txn, table: str,
+               predicate: Callable[[Dict[str, np.ndarray]], np.ndarray]):
+        self.locks.acquire(table, txn.id, "X")
+        txn.deletes.append((table, predicate))
+
+    def update(self, txn: Txn, table: str, predicate,
+               assign: Dict[str, np.ndarray or Callable]):
+        """UPDATE = DELETE matching rows + INSERT updated copies (§3.7.1)."""
+        rows = self.read_table(table)
+        mask = predicate(rows)
+        self.delete(txn, table, predicate)
+        new = {c: np.asarray(v[mask]).copy() for c, v in rows.items()}
+        for c, v in assign.items():
+            new[c] = v(new) if callable(v) else np.full(
+                int(mask.sum()), v, new[c].dtype)
+        self.insert(txn, table, new)
+
+    def commit(self, txn: Txn, *, fail_nodes_during_commit: Sequence[int]
+               = ()) -> int:
+        """Quorum commit without 2PC. Nodes failing mid-commit are ejected
+        and must recover; the commit succeeds iff a quorum remains."""
+        for nid in fail_nodes_during_commit:
+            self.fail_node(nid)
+        up = [n for n in self.nodes if n.up]
+        quorum = self.catalog.n_nodes // 2 + 1
+        if len(up) < quorum:
+            self.locks.release_all(txn.id)
+            raise AvailabilityError(
+                f"quorum lost: {len(up)}/{self.catalog.n_nodes} up, "
+                f"need {quorum}")
+        epoch = self.epochs.advance()  # auto-advance on DML commit (§5.1)
+        # deletes first: they target rows visible BEFORE this commit, so an
+        # UPDATE's re-inserted rows are not swallowed by its own delete
+        for table, predicate in txn.deletes:
+            self._apply_delete(table, predicate, epoch)
+        for (proj_name, node_id), data in txn.staged.items():
+            node = self.nodes[node_id]
+            if not node.up:
+                continue  # node missed the commit; recovery will replay
+            store = node.stores[proj_name]
+            segs = txn.staged_segments[(proj_name, node_id)]
+            if txn.direct_to_ros:
+                self._direct_ros(store, data, epoch, segs)
+            else:
+                store.wos.append(data, epoch, segs)
+                n = len(segs)
+                store.wos_delete_epochs.append(np.zeros(n, np.int64))
+        self.locks.release_all(txn.id)
+        return epoch
+
+    def rollback(self, txn: Txn):
+        txn.staged.clear()
+        txn.deletes.clear()
+        self.locks.release_all(txn.id)
+
+    def _direct_ros(self, store: ProjectionStore, data, epoch: int,
+                    segs: np.ndarray):
+        """Bulk loads tagged direct-to-ROS (§7): skip the WOS entirely."""
+        entry = self.catalog.tables[store.proj.anchor]
+        tmp = ProjectionStore(store.proj, WOS(store.proj.name))
+        tmp.wos.append(data, epoch, segs)
+        tmp.wos_delete_epochs.append(np.zeros(len(segs), np.int64))
+        new = moveout(tmp, sql_types=self._sql_types(store.proj),
+                      ahm=self.epochs.ahm,
+                      partition_expr=entry.partition_expr,
+                      block_rows=self.block_rows)
+        store.containers.extend(new)
+        for c in new:
+            if c.id in tmp.delete_vectors:
+                store.delete_vectors[c.id] = tmp.delete_vectors[c.id]
+
+    def _apply_delete(self, table: str, predicate, epoch: int):
+        for proj in self.catalog.projections_of(table):
+            for node in self.nodes:
+                if not node.up:
+                    continue
+                store = node.stores[proj.name]
+                for c in store.containers:
+                    rows = c.decode_all()
+                    try:
+                        m = predicate(rows)
+                    except KeyError:
+                        continue  # projection lacks predicate columns
+                    m &= ~store.deleted_mask(c)
+                    pos = np.flatnonzero(m)
+                    if pos.size:
+                        store.delete_vectors.setdefault(c.id, []).append(
+                            DeleteVector.build(
+                                c.id, pos,
+                                np.full(pos.size, epoch, np.int64)).to_ros())
+                data, eps, _ = store.wos.snapshot()
+                if len(eps):
+                    try:
+                        m = predicate(data)
+                    except KeyError:
+                        continue
+                    cur = (np.concatenate(store.wos_delete_epochs)
+                           if store.wos_delete_epochs
+                           else np.zeros(len(eps), np.int64))
+                    cur = np.where(m & (cur == 0), epoch, cur)
+                    store.wos_delete_epochs = [cur]
+
+    # ----------------------------------------------------------- reads --
+
+    def segment_owners(self, proj: ProjectionDef) -> Dict[int, str]:
+        """ring-node -> projection (primary or buddy) that can serve it from
+        a live node. Raises AvailabilityError when a segment is lost."""
+        owners = {}
+        buddy_name = proj.name + "_b1"
+        buddy = self.catalog.projections.get(buddy_name)
+        for seg_node in range(self.catalog.n_nodes):
+            if self.nodes[seg_node].up:
+                owners[seg_node] = proj.name
+            elif buddy is not None:
+                # the buddy stores segment s on node (s + offset) % N
+                host = (seg_node + buddy.segmentation.offset) % \
+                    self.catalog.n_nodes
+                if self.nodes[host].up:
+                    owners[seg_node] = buddy_name
+                else:
+                    raise AvailabilityError(
+                        f"segment {seg_node} of {proj.name} unavailable")
+            else:
+                raise AvailabilityError(
+                    f"segment {seg_node} of {proj.name} unavailable "
+                    f"(K=0)")
+        return owners
+
+    def read_projection(self, proj_name: str, *,
+                        as_of: Optional[int] = None,
+                        include_wos: bool = True) -> Dict[str, np.ndarray]:
+        """Snapshot read of all visible rows (host-side; the EE uses
+        container-level access instead, see engine/)."""
+        proj = self.catalog.projections[proj_name]
+        as_of = as_of if as_of is not None else self.epochs.latest_queryable()
+        if proj.segmentation.replicated:
+            first_up = next(n.id for n in self.nodes if n.up)
+            sources = [(first_up, proj_name)]
+        else:
+            owners = self.segment_owners(proj)
+            sources = []
+            for seg_node, owner_proj in owners.items():
+                host = seg_node
+                if owner_proj != proj_name:
+                    host = (seg_node + self.catalog.projections[
+                        owner_proj].segmentation.offset) % \
+                        self.catalog.n_nodes
+                # one host may serve several segments (its own via the
+                # primary AND a down neighbor's via the buddy store)
+                if (host, owner_proj) not in sources:
+                    sources.append((host, owner_proj))
+        parts = []
+        for host, owner_proj in sources:
+            store = self.nodes[host].stores[owner_proj]
+            parts.extend(self._store_rows(store, as_of, include_wos))
+        if not parts:
+            return {c: np.zeros(0, np.int64) for c in proj.columns}
+        return {c: np.concatenate([p[c] for p in parts])
+                for c in proj.columns}
+
+    def _store_rows(self, store: ProjectionStore, as_of: int,
+                    include_wos: bool) -> List[Dict[str, np.ndarray]]:
+        out = []
+        for c in store.containers:
+            vis = (c.epochs <= as_of) & ~store.deleted_mask(c, as_of)
+            if vis.any():
+                rows = c.decode_all()
+                out.append({k: v[vis] for k, v in rows.items()})
+        if include_wos:
+            data, eps, _ = store.wos.snapshot()
+            if len(eps):
+                dels = (np.concatenate(store.wos_delete_epochs)
+                        if store.wos_delete_epochs
+                        else np.zeros(len(eps), np.int64))
+                vis = (eps <= as_of) & ~((dels > 0) & (dels <= as_of))
+                if vis.any():
+                    out.append({k: v[vis] for k, v in data.items()})
+        return out
+
+    def read_table(self, table: str, *,
+                   as_of: Optional[int] = None) -> Dict[str, np.ndarray]:
+        return self.read_projection(self.catalog.super_of(table).name,
+                                    as_of=as_of)
+
+    # ----------------------------------------------- maintenance / ops --
+
+    def run_tuple_mover(self, *, force_moveout: bool = False):
+        stats = {"moveouts": 0, "mergeouts": 0}
+        any_down = any(not n.up for n in self.nodes)
+        for node in self.nodes:
+            if not node.up:
+                continue
+            for store in node.stores.values():
+                entry = self.catalog.tables[store.proj.anchor]
+                self.locks.acquire(store.proj.anchor, f"tm-{node.id}", "U")
+                try:
+                    s = run_tuple_mover(
+                        store, sql_types=self._sql_types(store.proj),
+                        ahm=self.epochs.ahm,
+                        partition_expr=entry.partition_expr,
+                        wos_row_limit=0 if force_moveout else 8192,
+                        block_rows=self.block_rows)
+                    stats["moveouts"] += s["moveouts"]
+                    stats["mergeouts"] += s["mergeouts"]
+                finally:
+                    self.locks.release_all(f"tm-{node.id}")
+                # LGE semantics (§5.1): it may only advance to the newest
+                # epoch FULLY persisted in ROS -- rows still in the WOS are
+                # lost on failure, so epochs still buffered there cap it
+                _, wos_eps, _ = store.wos.snapshot()
+                if len(wos_eps):
+                    lge = int(wos_eps.min()) - 1
+                else:
+                    lge = self.epochs.latest_queryable()
+                self.epochs.set_lge(store.proj.name, node.id, lge)
+        self.epochs.advance_ahm(nodes_down=any_down)
+        return stats
+
+    def drop_partition(self, table: str, partition_key: int):
+        """Fast bulk delete: drop whole containers (lock mode O, §3.5)."""
+        self.locks.acquire(table, "ddl", "O")
+        try:
+            for proj in self.catalog.projections_of(table):
+                for node in self.nodes:
+                    store = node.stores[proj.name]
+                    drop = [c for c in store.containers
+                            if c.partition_key == partition_key]
+                    store.containers = [c for c in store.containers
+                                        if c.partition_key != partition_key]
+                    for c in drop:
+                        store.delete_vectors.pop(c.id, None)
+        finally:
+            self.locks.release_all("ddl")
+
+    def fail_node(self, node_id: int):
+        node = self.nodes[node_id]
+        if not node.up:
+            return
+        node.up = False
+        node.stale_since = self.epochs.latest_queryable()
+        for store in node.stores.values():
+            store.wos.clear()          # WOS is memory: lost on failure
+            store.wos_delete_epochs = []
+
+    def storage_report(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for proj in self.catalog.projections.values():
+            total = raw = n = nc = 0
+            for node in self.nodes:
+                st = node.stores[proj.name]
+                total += sum(c.storage_bytes() for c in st.containers)
+                raw += sum(c.raw_bytes() for c in st.containers)
+                n += st.ros_rows()
+                nc += len(st.containers)
+            out[proj.name] = {"rows": n, "containers": nc,
+                              "stored_bytes": total, "raw_bytes": raw,
+                              "ratio": raw / total if total else 0.0}
+        return out

@@ -1,0 +1,477 @@
+"""Block-structured column encodings (paper §3.4).
+
+Vertica's six encoding types, adapted for TPU-friendly fixed shapes:
+
+1. AUTO              -- empirically picks the smallest encoding (the same
+                        machinery the Database Designer's storage-optimization
+                        phase uses, §6.3).
+2. RLE               -- (value, run_length) pairs; best for low-cardinality
+                        sorted columns.
+3. DELTA_VALUE       -- difference from the smallest value in the block; best
+                        for many-valued unsorted integers.
+4. BLOCK_DICT        -- per-block dictionary + codes; best for few-valued
+                        unsorted columns.
+5. DELTA_RANGE       -- ("Compressed Delta Range") delta from the previous
+                        value; best for many-valued sorted/range-bound data.
+6. COMMON_DELTA      -- ("Compressed Common Delta") dictionary of deltas +
+                        entropy-coded indexes; best for predictable sequences
+                        (timestamps, primary keys).
+(0. PLAIN            -- no encoding; the fallback.)
+
+Encode runs host-side (numpy) at moveout/mergeout time, exactly as Vertica
+encodes when writing ROS containers.  Decode has two implementations:
+
+* ``decode()``      -- numpy, used by host-side storage management (mergeout).
+* ``decode_jnp()``  -- jnp with static shapes, used by the execution engine on
+                       device; the Pallas scan kernels fuse this decode with
+                       filtering/aggregation (kernels/rle_scan_agg.py).
+
+Byte accounting (``storage_bytes``) models the *packed* size: integer payloads
+are charged at the narrowest {1,2,4,8}-byte width that fits, and COMMON_DELTA
+code streams are charged at their Shannon-entropy size (we model the entropy
+coder rather than implementing bit-IO; noted in DESIGN.md §9).  The in-memory
+numpy arrays may be wider; compression ratios reported by benchmarks use
+``storage_bytes``.
+
+Losslessness: every encoding must round-trip bit-exactly.  For FLOAT columns,
+delta encodings verify exact reconstruction at encode time and fall back to
+PLAIN when floating-point cancellation would lose bits -- this mirrors the
+DBD's empirical "try it on sample data" approach.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .types import BLOCK_ROWS, SQLType, num_blocks, pad_to_blocks
+
+
+class Encoding(enum.Enum):
+    PLAIN = "plain"
+    RLE = "rle"
+    DELTA_VALUE = "delta_value"
+    BLOCK_DICT = "block_dict"
+    DELTA_RANGE = "delta_range"
+    COMMON_DELTA = "common_delta"
+    # beyond the paper's six (EXPERIMENTS.md §Perf DB-1): decimal-quantized
+    # floats (meter readings, prices) scale exactly to integers and reuse
+    # the full integer encoding family; verified-exact with PLAIN fallback.
+    FLOAT_SCALED = "float_scaled"
+    AUTO = "auto"
+
+
+def _narrowest_uint(max_value: int) -> np.dtype:
+    """Narrowest unsigned dtype holding values in [0, max_value]."""
+    if max_value < (1 << 8):
+        return np.dtype(np.uint8)
+    if max_value < (1 << 16):
+        return np.dtype(np.uint16)
+    if max_value < (1 << 32):
+        return np.dtype(np.uint32)
+    return np.dtype(np.uint64)
+
+
+def _narrowest_int(min_value: int, max_value: int) -> np.dtype:
+    for dt in (np.int8, np.int16, np.int32, np.int64):
+        info = np.iinfo(dt)
+        if info.min <= min_value and max_value <= info.max:
+            return np.dtype(dt)
+    return np.dtype(np.int64)
+
+
+def _entropy_bits(codes: np.ndarray) -> float:
+    """Shannon entropy (bits/symbol) of a code stream -- models the entropy
+    coder of COMMON_DELTA without implementing bit IO."""
+    if codes.size == 0:
+        return 0.0
+    _, counts = np.unique(codes, return_counts=True)
+    p = counts / counts.sum()
+    return float(-(p * np.log2(p)).sum())
+
+
+@dataclasses.dataclass
+class EncodedColumn:
+    """One column of one ROS container, encoded & block-structured.
+
+    ``arrays`` hold scheme-specific payloads; every array has leading dim
+    ``n_blocks`` so the whole container is a stack of fixed-shape blocks
+    (TPU-friendly; see DESIGN.md hardware-adaptation table).
+    """
+
+    encoding: Encoding
+    sql_type: SQLType
+    n_rows: int
+    block_rows: int
+    arrays: Dict[str, np.ndarray]
+    # validity bitmap for SQL NULLs (None = column has no NULLs)
+    valid: Optional[np.ndarray] = None
+    # modeled packed size in bytes (see module docstring)
+    packed_bytes: float = 0.0
+    # FLOAT_SCALED: the integer-encoded payload + decimal scale
+    inner: Optional["EncodedColumn"] = None
+    scale: float = 1.0
+
+    @property
+    def n_blocks(self) -> int:
+        return num_blocks(self.n_rows, self.block_rows)
+
+    def storage_bytes(self) -> float:
+        b = self.packed_bytes
+        if self.valid is not None:
+            b += self.n_rows / 8.0  # 1-bit validity bitmap
+        return b
+
+    def decode(self) -> np.ndarray:
+        """Round-trip decode to a flat 1-D numpy array of n_rows values."""
+        if self.encoding == Encoding.FLOAT_SCALED:
+            return self.inner.decode().astype(np.float64) / self.scale
+        flat = _DECODERS[self.encoding](self.arrays, self.block_rows)
+        return flat.reshape(-1)[: self.n_rows]
+
+    def decode_blocks(self) -> np.ndarray:
+        """Decode to (n_blocks, block_rows); tail block padded."""
+        if self.encoding == Encoding.FLOAT_SCALED:
+            return self.inner.decode_blocks().astype(np.float64) / self.scale
+        return _DECODERS[self.encoding](self.arrays, self.block_rows)
+
+    def valid_mask(self) -> Optional[np.ndarray]:
+        if self.valid is None:
+            return None
+        return self.valid.reshape(-1)[: self.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# Encoders.  All take a 1-D numpy array and return (arrays, packed_bytes).
+# ---------------------------------------------------------------------------
+
+def _encode_plain(values: np.ndarray, block_rows: int):
+    isint = np.issubdtype(values.dtype, np.integer)
+    if isint and values.size:
+        store_dt = _narrowest_int(int(values.min()), int(values.max()))
+    else:
+        store_dt = values.dtype
+    blocks = pad_to_blocks(values.astype(store_dt, copy=False), block_rows)
+    return {"values": blocks}, float(values.size * store_dt.itemsize)
+
+
+def _decode_plain(arrays, block_rows):
+    return arrays["values"].astype(
+        np.int64 if np.issubdtype(arrays["values"].dtype, np.integer)
+        else np.float64)
+
+
+def _rle_runs(block: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Run-length encode one block -> (run_values, run_lengths)."""
+    if block.size == 0:
+        return block, np.zeros(0, np.int64)
+    change = np.empty(block.size, dtype=bool)
+    change[0] = True
+    np.not_equal(block[1:], block[:-1], out=change[1:])
+    starts = np.flatnonzero(change)
+    lengths = np.diff(np.append(starts, block.size))
+    return block[starts], lengths
+
+
+def _encode_rle(values: np.ndarray, block_rows: int):
+    blocks = pad_to_blocks(values, block_rows,
+                           pad_value=values[-1] if values.size else 0)
+    nb = blocks.shape[0]
+    per_block = [_rle_runs(b) for b in blocks]
+    max_runs = max(rv.size for rv, _ in per_block)
+    run_values = np.zeros((nb, max_runs), dtype=values.dtype)
+    run_lengths = np.zeros((nb, max_runs), dtype=np.int32)
+    n_runs = np.zeros(nb, dtype=np.int32)
+    packed = 0.0
+    val_bytes = values.dtype.itemsize
+    if np.issubdtype(values.dtype, np.integer) and values.size:
+        val_bytes = _narrowest_int(int(values.min()), int(values.max())).itemsize
+    for i, (rv, rl) in enumerate(per_block):
+        run_values[i, : rv.size] = rv
+        run_lengths[i, : rl.size] = rl
+        n_runs[i] = rv.size
+        packed += rv.size * (val_bytes +
+                             _narrowest_uint(int(rl.max()) if rl.size else 0).itemsize)
+    return ({"run_values": run_values, "run_lengths": run_lengths,
+             "n_runs": n_runs}, packed)
+
+
+def _decode_rle(arrays, block_rows):
+    rv, rl = arrays["run_values"], arrays["run_lengths"]
+    nb = rv.shape[0]
+    out_dt = (np.int64 if np.issubdtype(rv.dtype, np.integer) else np.float64)
+    out = np.zeros((nb, block_rows), dtype=out_dt)
+    for i in range(nb):
+        n = int(arrays["n_runs"][i])
+        dec = np.repeat(rv[i, :n], rl[i, :n])
+        out[i, : dec.size] = dec
+    return out
+
+
+def _encode_delta_value(values: np.ndarray, block_rows: int):
+    # integer only (checked by choose/encode dispatcher)
+    blocks = pad_to_blocks(values, block_rows)
+    base = blocks.min(axis=1)
+    deltas64 = blocks - base[:, None]
+    dmax = int(deltas64.max()) if deltas64.size else 0
+    dt = _narrowest_uint(dmax)
+    # storage is BIT-packed per block (Vertica packs integers at the
+    # narrowest bit width, not byte width); in-memory arrays stay byte-wide
+    bits = max(1, int(np.ceil(np.log2(dmax + 1)))) if dmax else 1
+    return ({"base": base, "deltas": deltas64.astype(dt)},
+            float(values.size * bits / 8 + base.size * 8))
+
+
+def _decode_delta_value(arrays, block_rows):
+    return arrays["base"][:, None].astype(np.int64) + \
+        arrays["deltas"].astype(np.int64)
+
+
+def _encode_block_dict(values: np.ndarray, block_rows: int):
+    blocks = pad_to_blocks(values, block_rows,
+                           pad_value=values[-1] if values.size else 0)
+    nb = blocks.shape[0]
+    uniq_per_block = [np.unique(b) for b in blocks]
+    dict_size = max(u.size for u in uniq_per_block)
+    dict_values = np.zeros((nb, dict_size), dtype=values.dtype)
+    codes = np.zeros((nb, block_rows), dtype=_narrowest_uint(dict_size - 1))
+    dict_n = np.zeros(nb, dtype=np.int32)
+    packed = 0.0
+    for i, u in enumerate(uniq_per_block):
+        dict_values[i, : u.size] = u
+        codes[i] = np.searchsorted(u, blocks[i]).astype(codes.dtype)
+        dict_n[i] = u.size
+        code_bits = max(1, int(np.ceil(np.log2(max(u.size, 2)))))
+        packed += u.size * values.dtype.itemsize + blocks.shape[1] * code_bits / 8
+    return ({"dict_values": dict_values, "codes": codes, "dict_n": dict_n},
+            packed)
+
+
+def _decode_block_dict(arrays, block_rows):
+    dv = arrays["dict_values"]
+    out = np.take_along_axis(dv, arrays["codes"].astype(np.int64), axis=1)
+    return out.astype(np.int64 if np.issubdtype(dv.dtype, np.integer)
+                      else np.float64)
+
+
+def _encode_delta_range(values: np.ndarray, block_rows: int):
+    blocks = pad_to_blocks(values, block_rows,
+                           pad_value=values[-1] if values.size else 0)
+    first = blocks[:, 0].copy()
+    deltas = np.diff(blocks, axis=1, prepend=first[:, None])
+    if np.issubdtype(values.dtype, np.integer):
+        dt = _narrowest_int(int(deltas.min()), int(deltas.max()))
+        arrays = {"first": first, "deltas": deltas.astype(dt)}
+        packed = values.size * dt.itemsize + first.size * 8
+    else:
+        # floats: try float32 deltas; verify exact round-trip, else reject
+        d32 = deltas.astype(np.float32)
+        recon = first[:, None] + np.cumsum(d32.astype(np.float64), axis=1) \
+            - d32[:, :1].astype(np.float64)
+        if not np.array_equal(recon, blocks):
+            raise _Inexact()
+        arrays = {"first": first, "deltas": d32}
+        packed = values.size * 4 + first.size * 8
+    return arrays, float(packed)
+
+
+def _decode_delta_range(arrays, block_rows):
+    d = arrays["deltas"].astype(
+        np.int64 if np.issubdtype(arrays["deltas"].dtype, np.integer)
+        else np.float64)
+    first = arrays["first"][:, None].astype(d.dtype)
+    return first + np.cumsum(d, axis=1) - d[:, :1]
+
+
+def _encode_common_delta(values: np.ndarray, block_rows: int):
+    # integer only: dictionary over the (few) distinct deltas, entropy-coded
+    blocks = pad_to_blocks(values, block_rows,
+                           pad_value=values[-1] if values.size else 0)
+    nb = blocks.shape[0]
+    first = blocks[:, 0].copy()
+    deltas = np.diff(blocks, axis=1, prepend=first[:, None])
+    uniq_per_block = [np.unique(d) for d in deltas]
+    dict_size = max(u.size for u in uniq_per_block)
+    delta_dict = np.zeros((nb, dict_size), dtype=np.int64)
+    codes = np.zeros((nb, block_rows), dtype=_narrowest_uint(dict_size - 1))
+    dict_n = np.zeros(nb, dtype=np.int32)
+    packed = 0.0
+    for i, u in enumerate(uniq_per_block):
+        delta_dict[i, : u.size] = u
+        codes[i] = np.searchsorted(u, deltas[i]).astype(codes.dtype)
+        dict_n[i] = u.size
+        packed += u.size * 8 + _entropy_bits(codes[i]) * block_rows / 8
+    packed += first.size * 8
+    return ({"first": first, "delta_dict": delta_dict, "codes": codes,
+             "dict_n": dict_n}, packed)
+
+
+def _decode_common_delta(arrays, block_rows):
+    deltas = np.take_along_axis(arrays["delta_dict"],
+                                arrays["codes"].astype(np.int64), axis=1)
+    first = arrays["first"][:, None].astype(np.int64)
+    return first + np.cumsum(deltas, axis=1) - deltas[:, :1]
+
+
+class _Inexact(Exception):
+    """Raised when a lossy-for-this-data encoding must be rejected."""
+
+
+def _try_float_scaled(values: np.ndarray, sql_type, n_rows: int,
+                      block_rows: int, valid) -> Optional["EncodedColumn"]:
+    """Decimal-quantized floats -> scaled integers -> best int encoding.
+    Exactness verified; returns None if any value fails round-trip."""
+    if not np.issubdtype(values.dtype, np.floating) or values.size == 0:
+        return None
+    if not np.isfinite(values).all():
+        return None
+    for k in (0, 1, 2, 3):
+        scale = 10.0 ** k
+        scaled = values * scale
+        ints = np.rint(scaled)
+        if np.abs(ints).max() >= 2 ** 52:
+            return None
+        if not np.array_equal(ints.astype(np.int64) / scale, values):
+            continue
+        inner = encode(ints.astype(np.int64), SQLType.INT, Encoding.AUTO,
+                       block_rows=block_rows)
+        return EncodedColumn(Encoding.FLOAT_SCALED, sql_type, n_rows,
+                             block_rows, {}, valid, inner.packed_bytes,
+                             inner=inner, scale=scale)
+    return None
+
+
+_ENCODERS = {
+    Encoding.PLAIN: _encode_plain,
+    Encoding.RLE: _encode_rle,
+    Encoding.DELTA_VALUE: _encode_delta_value,
+    Encoding.BLOCK_DICT: _encode_block_dict,
+    Encoding.DELTA_RANGE: _encode_delta_range,
+    Encoding.COMMON_DELTA: _encode_common_delta,
+}
+
+_DECODERS = {
+    Encoding.PLAIN: _decode_plain,
+    Encoding.RLE: _decode_rle,
+    Encoding.DELTA_VALUE: _decode_delta_value,
+    Encoding.BLOCK_DICT: _decode_block_dict,
+    Encoding.DELTA_RANGE: _decode_delta_range,
+    Encoding.COMMON_DELTA: _decode_common_delta,
+}
+
+# Which encodings are even legal for a given dtype family
+_INT_ENCODINGS = (Encoding.RLE, Encoding.COMMON_DELTA, Encoding.DELTA_VALUE,
+                  Encoding.BLOCK_DICT, Encoding.DELTA_RANGE, Encoding.PLAIN)
+_FLOAT_ENCODINGS = (Encoding.FLOAT_SCALED, Encoding.RLE,
+                    Encoding.BLOCK_DICT, Encoding.DELTA_RANGE,
+                    Encoding.PLAIN)
+
+
+def encode(values: np.ndarray, sql_type: SQLType,
+           encoding: Encoding = Encoding.AUTO,
+           valid: Optional[np.ndarray] = None,
+           block_rows: int = BLOCK_ROWS) -> EncodedColumn:
+    """Encode a 1-D value array into an EncodedColumn.
+
+    ``encoding=AUTO`` empirically tries every legal scheme and keeps the
+    smallest (the DBD §6.3 storage-optimization step).  Explicit schemes that
+    cannot represent the data exactly (float cancellation) or that do not
+    apply to the dtype fall back to PLAIN.
+    """
+    values = np.ascontiguousarray(values)
+    n_rows = int(values.size)
+    if valid is not None:
+        valid = pad_to_blocks(np.asarray(valid, dtype=bool), block_rows,
+                              pad_value=False)
+
+    isint = np.issubdtype(values.dtype, np.integer)
+    values = values.astype(np.int64 if isint else np.float64, copy=False)
+
+    def _try(enc: Encoding):
+        if enc == Encoding.FLOAT_SCALED:
+            return _try_float_scaled(values, sql_type, n_rows, block_rows,
+                                     valid)
+        try:
+            arrays, packed = _ENCODERS[enc](values, block_rows)
+        except (_Inexact, ValueError, OverflowError):
+            return None
+        return EncodedColumn(enc, sql_type, n_rows, block_rows, arrays,
+                             valid, packed)
+
+    if encoding == Encoding.AUTO:
+        candidates = _INT_ENCODINGS if isint else _FLOAT_ENCODINGS
+        best = None
+        for enc in candidates:
+            col = _try(enc)
+            if col is not None and (best is None or
+                                    col.packed_bytes < best.packed_bytes):
+                best = col
+        assert best is not None
+        return best
+
+    legal = _INT_ENCODINGS if isint else _FLOAT_ENCODINGS
+    if encoding not in legal:
+        encoding = Encoding.PLAIN
+    col = _try(encoding)
+    if col is None:  # inexact for this data -> PLAIN (always succeeds)
+        col = _try(Encoding.PLAIN)
+    return col
+
+
+# ---------------------------------------------------------------------------
+# jnp decode paths (static shapes) -- used by the execution engine / kernels.
+# Imported lazily so host-only storage code never pulls in jax.
+# ---------------------------------------------------------------------------
+
+def decode_jnp(col: EncodedColumn):
+    """Decode to a (n_blocks, block_rows) jnp array on device."""
+    import jax.numpy as jnp
+
+    if col.encoding == Encoding.FLOAT_SCALED:
+        return decode_jnp(col.inner).astype(jnp.float32) / col.scale
+    a = {k: jnp.asarray(v) for k, v in col.arrays.items()}
+    br = col.block_rows
+    enc = col.encoding
+    if enc == Encoding.PLAIN:
+        return a["values"].astype(jnp.int64
+                                  if np.issubdtype(col.arrays["values"].dtype,
+                                                   np.integer)
+                                  else jnp.float64)
+    if enc == Encoding.RLE:
+        # positions p belong to run r iff cum_lengths[r-1] <= p < cum_lengths[r]
+        cum = jnp.cumsum(a["run_lengths"], axis=1)
+        pos = jnp.arange(br)[None, None, :]              # (1,1,br)
+        run_idx = (pos >= cum[:, :, None]).sum(axis=1)   # (nb,br)
+        run_idx = jnp.clip(run_idx, 0, a["run_values"].shape[1] - 1)
+        return jnp.take_along_axis(a["run_values"], run_idx, axis=1)
+    if enc == Encoding.DELTA_VALUE:
+        return a["base"][:, None].astype(jnp.int64) + \
+            a["deltas"].astype(jnp.int64)
+    if enc == Encoding.BLOCK_DICT:
+        return jnp.take_along_axis(a["dict_values"],
+                                   a["codes"].astype(jnp.int32), axis=1)
+    if enc == Encoding.DELTA_RANGE:
+        isint = np.issubdtype(col.arrays["deltas"].dtype, np.integer)
+        d = a["deltas"].astype(jnp.int64 if isint else jnp.float64)
+        first = a["first"][:, None].astype(d.dtype)
+        return first + jnp.cumsum(d, axis=1) - d[:, :1]
+    if enc == Encoding.COMMON_DELTA:
+        deltas = jnp.take_along_axis(a["delta_dict"],
+                                     a["codes"].astype(jnp.int32), axis=1)
+        first = a["first"][:, None].astype(jnp.int64)
+        return first + jnp.cumsum(deltas, axis=1) - deltas[:, :1]
+    raise ValueError(f"cannot decode {enc}")
+
+
+def choose_encoding_stats(values: np.ndarray) -> Dict[str, float]:
+    """Data statistics the DBD reports alongside its empirical choice."""
+    n = values.size
+    if n == 0:
+        return {"n": 0, "n_distinct": 0, "sortedness": 1.0, "run_ratio": 0.0}
+    nd = int(np.unique(values).size)
+    sortedness = float(np.mean(values[1:] >= values[:-1])) if n > 1 else 1.0
+    runs = 1 + int(np.sum(values[1:] != values[:-1])) if n > 1 else 1
+    return {"n": n, "n_distinct": nd, "sortedness": sortedness,
+            "run_ratio": runs / n}

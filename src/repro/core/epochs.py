@@ -1,0 +1,63 @@
+"""Epoch management (paper §5, §5.1).
+
+Commits advance the epoch (the post-C-Store change: automatic advancement on
+DML commit, fixing the READ COMMITTED visibility confusion). Snapshot reads
+need no locks: a query targets ``current_epoch - 1`` by default and sees
+exactly the rows with commit_epoch <= target < delete_epoch.
+
+LGE (Last Good Epoch): per (projection, node) -- everything up to it has
+been moved out of the WOS to disk; data past it is lost if the node dies.
+AHM (Ancient History Mark): history before it may be purged by mergeout;
+it does not advance while nodes are down (they will need the history to
+replay).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class EpochManager:
+    current_epoch: int = 1
+    ahm: int = 0
+    # (projection, node) -> last good epoch
+    lge: Dict[Tuple[str, int], int] = dataclasses.field(default_factory=dict)
+
+    def advance(self) -> int:
+        """Commit boundary: every committed txn gets the pre-advance epoch."""
+        e = self.current_epoch
+        self.current_epoch += 1
+        return e
+
+    def latest_queryable(self) -> int:
+        return self.current_epoch - 1
+
+    def set_lge(self, projection: str, node: int, epoch: int):
+        key = (projection, node)
+        self.lge[key] = max(self.lge.get(key, 0), epoch)
+
+    def get_lge(self, projection: str, node: int) -> int:
+        return self.lge.get((projection, node), 0)
+
+    def cluster_lge(self, projection: str, nodes) -> int:
+        return min((self.get_lge(projection, n) for n in nodes), default=0)
+
+    def advance_ahm(self, to_epoch: Optional[int] = None, *,
+                    nodes_down: bool = False):
+        """AHM policy: advance to the min cluster LGE (or explicit target),
+        never past it, and never while nodes are down (paper §5.1)."""
+        if nodes_down:
+            return
+        target = to_epoch if to_epoch is not None else \
+            min(self.lge.values(), default=0)
+        self.ahm = max(self.ahm, min(target, self.latest_queryable()))
+
+    def visible(self, commit_epochs, delete_mask_epochs=None,
+                as_of: Optional[int] = None):
+        """Row visibility at a snapshot (vectorized over numpy arrays)."""
+        e = as_of if as_of is not None else self.latest_queryable()
+        vis = commit_epochs <= e
+        if delete_mask_epochs is not None:
+            vis &= ~delete_mask_epochs
+        return vis

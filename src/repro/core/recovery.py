@@ -1,0 +1,349 @@
+"""Recovery, refresh, rebalance, backup (paper §5.2).
+
+All four are online: the cluster keeps serving reads/writes from live nodes
+while they run (our simulation is single-threaded, but the lock discipline
+matches: historical phase lock-free, current phase under an S lock).
+
+Recovery of a rejoining node, per projection segment:
+  1. truncate everything past the node's LGE (WOS already lost),
+  2. historical phase (no locks): copy committed rows in (LGE, E_h] from
+     the buddy -- buddies share sort orders here, so this is the paper's
+     'simply copies whole ROS containers and their delete vectors' path,
+  3. current phase (S lock on the anchor table): copy (E_h, current].
+
+There is no transaction log: data + epochs ARE the log.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .database import AvailabilityError, VerticaDB
+from .projection import ProjectionDef
+from .segmentation import rebalance_plan
+from .storage import DeleteVector, ROSContainer, WOS
+from .tuple_mover import ProjectionStore
+
+
+def _rows_with_delete_epochs(db: VerticaDB, store: ProjectionStore,
+                             lo: int, hi: int):
+    """All rows (incl. deleted ones) with commit epoch in (lo, hi], plus
+    their delete epochs -- the replay stream."""
+    parts, dparts, eparts = [], [], []
+    for c in store.containers:
+        sel = (c.epochs > lo) & (c.epochs <= hi)
+        if sel.any():
+            rows = c.decode_all()
+            parts.append({k: v[sel] for k, v in rows.items()})
+            eparts.append(c.epochs[sel])
+            dparts.append(store.delete_epochs_of(c)[sel])
+    data, eps, _ = store.wos.snapshot()
+    if len(eps):
+        sel = (eps > lo) & (eps <= hi)
+        if sel.any():
+            dels = (np.concatenate(store.wos_delete_epochs)
+                    if store.wos_delete_epochs
+                    else np.zeros(len(eps), np.int64))
+            parts.append({k: v[sel] for k, v in data.items()})
+            eparts.append(eps[sel])
+            dparts.append(dels[sel])
+    if not parts:
+        return None
+    cols = {c: np.concatenate([p[c] for p in parts]) for c in parts[0]}
+    return cols, np.concatenate(eparts), np.concatenate(dparts)
+
+
+def _install_rows(db: VerticaDB, store: ProjectionStore, node_id: int,
+                  rows, epochs, delete_epochs):
+    """Build ROS containers on the recovering node from a replay stream,
+    keeping only rows belonging to this node's ring range."""
+    proj = store.proj
+    entry = db.catalog.tables[proj.anchor]
+    if not proj.segmentation.replicated:
+        nodes, segs = proj.segmentation.place(rows, db.catalog.n_nodes)
+        sel = nodes == node_id
+        rows = {c: v[sel] for c, v in rows.items()}
+        epochs, delete_epochs = epochs[sel], delete_epochs[sel]
+        segs = segs[sel]
+    else:
+        segs = np.zeros(len(epochs), np.int32)
+    if len(epochs) == 0:
+        return
+    tmp = ProjectionStore(proj, WOS(proj.name))
+    tmp.wos.append(rows, epochs, segs)
+    tmp.wos_delete_epochs = [delete_epochs]
+    from .tuple_mover import moveout
+    new = moveout(tmp, sql_types=db._sql_types(proj), ahm=db.epochs.ahm,
+                  partition_expr=entry.partition_expr,
+                  block_rows=db.block_rows)
+    store.containers.extend(new)
+    for c in new:
+        if c.id in tmp.delete_vectors:
+            store.delete_vectors[c.id] = tmp.delete_vectors[c.id]
+
+
+def _truncate_past(db: VerticaDB, store: ProjectionStore, epoch: int):
+    """Drop rows committed after ``epoch``; clear newer delete marks."""
+    kept = []
+    for c in store.containers:
+        sel = c.epochs <= epoch
+        dvs = store.delete_vectors.pop(c.id, [])
+        if sel.all():
+            kept.append(c)
+            ndvs = []
+            for dv in dvs:
+                keep = dv.delete_epochs <= epoch
+                if keep.any():
+                    ndvs.append(DeleteVector.build(
+                        c.id, dv.positions[keep],
+                        dv.delete_epochs[keep]).to_ros())
+            if ndvs:
+                store.delete_vectors[c.id] = ndvs
+            continue
+        if not sel.any():
+            continue
+        rows = c.decode_all()
+        dels = store.delete_epochs_of(c)
+        dels = np.where(dels <= epoch, dels, 0)
+        nc = ROSContainer.build(
+            store.proj, {k: v[sel] for k, v in rows.items()},
+            c.epochs[sel], sql_types=db._sql_types(store.proj),
+            partition_key=c.partition_key, local_segment=c.local_segment,
+            presorted=True, block_rows=db.block_rows)
+        kept.append(nc)
+        dpos = np.flatnonzero(dels[sel] > 0)
+        if dpos.size:
+            store.delete_vectors[nc.id] = [DeleteVector.build(
+                nc.id, dpos, dels[sel][dpos]).to_ros()]
+    store.containers = kept
+
+
+def _replay_deletes(db: VerticaDB, store: ProjectionStore,
+                    src: ProjectionStore, lo: int, hi: int, node_id: int):
+    """Replay DELETEs of rows that the recovering node already has (commit
+    epoch <= lo) but whose delete vector (delete epoch in (lo, hi]) it
+    missed while down. Rows are matched by full-tuple hash -- the data +
+    epoch IS the log, there are no row ids (paper §5.2)."""
+    proj = store.proj
+    from .segmentation import hash_columns
+    from collections import Counter
+    wanted: Counter = Counter()
+    epochs_for = {}
+    for c in src.containers:
+        de = src.delete_epochs_of(c)
+        sel = (de > lo) & (de <= hi) & (c.epochs <= lo)
+        if not sel.any():
+            continue
+        rows = c.decode_all()
+        if not proj.segmentation.replicated:
+            nodes_arr, _ = proj.segmentation.place(rows, db.catalog.n_nodes)
+            sel &= nodes_arr == node_id
+        h = hash_columns(*[rows[col].astype(np.int64)
+                           if rows[col].dtype.kind != "f"
+                           else rows[col].view(np.int64)
+                           for col in proj.columns])
+        for hv, ep in zip(h[sel].tolist(), de[sel].tolist()):
+            wanted[hv] += 1
+            epochs_for[hv] = ep
+    if not wanted:
+        return
+    for c in store.containers:
+        rows = c.decode_all()
+        h = hash_columns(*[rows[col].astype(np.int64)
+                           if rows[col].dtype.kind != "f"
+                           else rows[col].view(np.int64)
+                           for col in proj.columns])
+        already = store.deleted_mask(c)
+        pos, eps = [], []
+        for i, hv in enumerate(h.tolist()):
+            if wanted.get(hv, 0) > 0 and not already[i]:
+                wanted[hv] -= 1
+                pos.append(i)
+                eps.append(epochs_for[hv])
+        if pos:
+            store.delete_vectors.setdefault(c.id, []).append(
+                DeleteVector.build(c.id, np.asarray(pos),
+                                   np.asarray(eps, np.int64)).to_ros())
+
+
+def recover_node(db: VerticaDB, node_id: int, *,
+                 historical_lag: int = 1) -> Dict[str, int]:
+    """Rejoin a failed node. Returns rows replayed per projection."""
+    node = db.nodes[node_id]
+    if node.up:
+        return {}
+    replayed: Dict[str, int] = {}
+    current = db.epochs.latest_queryable()
+    for proj_name, store in node.stores.items():
+        proj = db.catalog.projections[proj_name]
+        lge = db.epochs.get_lge(proj_name, node_id)
+        # the historical/current boundary must never fall below the LGE or
+        # the current phase would re-install rows the node already has
+        e_h = max(lge, current - historical_lag)
+        _truncate_past(db, store, lge)
+        src = _buddy_source(db, proj, node_id)
+        if src is None:
+            continue
+        # historical phase: (LGE, e_h], no locks
+        total = 0
+        stream = _rows_with_delete_epochs(db, src, lge, e_h)
+        if stream:
+            _install_rows(db, store, node_id, *stream)
+            total += len(stream[1])
+        _replay_deletes(db, store, src, lge, e_h, node_id)
+        db.epochs.set_lge(proj_name, node_id, e_h)
+        # current phase: (e_h, current] under a Shared lock
+        db.locks.acquire(proj.anchor, f"recover-{node_id}", "S")
+        try:
+            stream = _rows_with_delete_epochs(db, src, e_h, current)
+            if stream:
+                _install_rows(db, store, node_id, *stream)
+                total += len(stream[1])
+            _replay_deletes(db, store, src, e_h, current, node_id)
+            db.epochs.set_lge(proj_name, node_id, current)
+        finally:
+            db.locks.release_all(f"recover-{node_id}")
+        replayed[proj_name] = total
+    node.up = True
+    node.stale_since = None
+    return replayed
+
+
+def _buddy_source(db: VerticaDB, proj: ProjectionDef,
+                  node_id: int) -> Optional[ProjectionStore]:
+    """The live store that holds this node's rows: the buddy projection's
+    store on the offset node (or, for a buddy/replicated projection, the
+    primary's)."""
+    if proj.segmentation.replicated:
+        for n in db.nodes:
+            if n.up and n.id != node_id:
+                return n.stores[proj.name]
+        return None
+    if proj.buddy_of is not None:
+        primary = db.catalog.projections[proj.buddy_of]
+        host = (node_id - proj.segmentation.offset) % db.catalog.n_nodes
+        # rows this buddy-node stores = primary segment of (node - offset)
+        src_node = db.nodes[(node_id - proj.segmentation.offset)
+                            % db.catalog.n_nodes]
+        if src_node.up:
+            return src_node.stores[primary.name]
+        return None
+    buddy = db.catalog.projections.get(proj.name + "_b1")
+    if buddy is None:
+        return None
+    host = (node_id + buddy.segmentation.offset) % db.catalog.n_nodes
+    if db.nodes[host].up:
+        return db.nodes[host].stores[buddy.name]
+    return None
+
+
+def refresh_projection(db: VerticaDB, proj_name: str):
+    """Populate a projection created after its table was loaded (§5.2):
+    historical phase from the super projection, current under S lock."""
+    proj = db.catalog.projections[proj_name]
+    current = db.epochs.latest_queryable()
+    sp = db.catalog.super_of(proj.anchor)
+    rows = db.read_projection(sp.name, as_of=current)
+    base = {c: rows[c] for c in proj.columns if c in rows}
+    if proj.prejoin is not None:
+        base = db._project_rows(proj, rows)
+    n = len(next(iter(base.values()))) if base else 0
+    if n == 0:
+        return
+    epochs = np.full(n, max(current, 1), np.int64)
+    dels = np.zeros(n, np.int64)
+    db.locks.acquire(proj.anchor, "refresh", "S")
+    try:
+        for node in db.nodes:
+            if not node.up:
+                continue
+            store = node.stores[proj_name]
+            if proj.segmentation.replicated:
+                _install_rows(db, store, node.id, base, epochs, dels)
+            else:
+                _install_rows(db, store, node.id, base, epochs, dels)
+            db.epochs.set_lge(proj_name, node.id, current)
+    finally:
+        db.locks.release_all("refresh")
+
+
+def rebalance(db: VerticaDB, new_n_nodes: int) -> int:
+    """Elastic resize: move whole local segments to the new topology
+    (paper §3.6 'local segments'), then re-register stores. Returns the
+    number of segment moves."""
+    old_n = db.catalog.n_nodes
+    if new_n_nodes == old_n:
+        return 0
+    from .database import NodeState
+    # snapshot all rows per projection before resizing
+    snapshots = {}
+    for proj in list(db.catalog.projections.values()):
+        parts = []
+        for node in db.nodes:
+            st = node.stores.get(proj.name)
+            if st is None:
+                continue
+            stream = _rows_with_delete_epochs(db, st, 0,
+                                              db.epochs.latest_queryable())
+            if stream:
+                parts.append(stream)
+        snapshots[proj.name] = parts
+    moves = rebalance_plan(old_n, new_n_nodes, 3)
+    # rebuild topology
+    if new_n_nodes > old_n:
+        for i in range(old_n, new_n_nodes):
+            db.nodes.append(NodeState(i))
+            for proj in db.catalog.projections.values():
+                db.nodes[i].stores[proj.name] = ProjectionStore(
+                    proj, WOS(proj.name))
+    else:
+        db.nodes = db.nodes[:new_n_nodes]
+    db.catalog.n_nodes = new_n_nodes
+    # redistribute (wholesale per projection; the plan above is the
+    # accounting of which local segments physically move)
+    for proj in db.catalog.projections.values():
+        for node in db.nodes:
+            node.stores[proj.name] = ProjectionStore(proj, WOS(proj.name))
+        for rows, eps, dels in snapshots.get(proj.name, []):
+            if proj.segmentation.replicated:
+                for node in db.nodes:
+                    _install_rows(db, node.stores[proj.name], node.id,
+                                  rows, eps, dels)
+            else:
+                nodes_arr, _ = proj.segmentation.place(rows, new_n_nodes)
+                for nid in np.unique(nodes_arr):
+                    _install_rows(db, db.nodes[int(nid)].stores[proj.name],
+                                  int(nid), rows, eps, dels)
+        for node in db.nodes:
+            db.epochs.set_lge(proj.name, node.id,
+                              db.epochs.latest_queryable())
+    return len(moves)
+
+
+def backup(db: VerticaDB) -> Dict:
+    """Snapshot backup: catalog + references to immutable containers (the
+    'hard link' trick -- containers are never modified, so references
+    suffice; no data copy)."""
+    img = {"epoch": db.epochs.latest_queryable(), "catalog": db.catalog,
+           "nodes": {}}
+    for node in db.nodes:
+        img["nodes"][node.id] = {
+            p: {"containers": list(st.containers),
+                "delete_vectors": {k: list(v) for k, v in
+                                   st.delete_vectors.items()}}
+            for p, st in node.stores.items()}
+    return img
+
+
+def restore(db: VerticaDB, img: Dict):
+    db.catalog = img["catalog"]
+    for node in db.nodes:
+        for p, snap in img["nodes"].get(node.id, {}).items():
+            st = node.stores[p]
+            st.containers = list(snap["containers"])
+            st.delete_vectors = {k: list(v) for k, v in
+                                 snap["delete_vectors"].items()}
+            st.wos.clear()
+            st.wos_delete_epochs = []
+    db.epochs.current_epoch = img["epoch"] + 1

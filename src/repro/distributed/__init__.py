@@ -1,0 +1,5 @@
+from .mesh import DATA, MODEL, POD, dp_size, mesh_axis_size, tp_size
+from .sharding import BASE_RULES, long_context_overrides, rules_for
+
+__all__ = ["DATA", "MODEL", "POD", "dp_size", "mesh_axis_size", "tp_size",
+           "BASE_RULES", "long_context_overrides", "rules_for"]

@@ -1,0 +1,31 @@
+"""Mesh axis conventions.
+
+Axes:
+  pod   -- inter-pod data parallelism (DCI links); present on multi-pod mesh
+  data  -- intra-pod data parallelism / FSDP param storage / segmentation
+           (the Vertica 'segmentation' axis: tuple->node, batch->chip)
+  model -- tensor/expert parallelism
+
+The production meshes are built by launch/mesh.py (kept separate so that
+importing this module never touches jax device state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+POD, DATA, MODEL = "pod", "data", "model"
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def dp_size(mesh) -> int:
+    """Total data-parallel ways = pod * data."""
+    return mesh_axis_size(mesh, POD) * mesh_axis_size(mesh, DATA)
+
+
+def tp_size(mesh) -> int:
+    return mesh_axis_size(mesh, MODEL)

@@ -1,0 +1,143 @@
+"""Logical-axis -> mesh-axis sharding rules (the framework's GSPMD policy).
+
+The paper's segmentation insight maps directly: a *deterministic value->node
+assignment* (here: batch element -> ('pod','data') chip row; attention-head /
+expert / vocab shard -> 'model' chip column) is what makes operations local
+and keeps the interconnect off the roofline's critical path. Co-located
+compute = Vertica's co-located join; resegmentation = all_to_all.
+
+Rule tables are plain dicts so hillclimbing can swap them per (arch x shape)
+without touching model code. See EXPERIMENTS.md §Perf for the iterations.
+
+Head layout for tensor parallelism
+----------------------------------
+Attention q/o weights are stored in a ``(kv_eff, group_eff, head_dim)``
+layout (see models/attention.py: HeadLayout). ``kv_eff`` is always a multiple
+of the model-axis size, so head sharding is even for every assigned arch --
+including starcoder2 (36 heads) and hymba (25 heads) which do not divide 16.
+Surplus slots are *dead* (zero-init, hard-masked) and kv heads needing
+replication are repeated **in the weight graph** (a few-MB collective on
+weights, instead of per-token activation collectives). The compute waste of
+dead slots is visible in the roofline MODEL_FLOPS/HLO_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Baseline rules (paper-faithful segmentation analogue).
+# Params store their embed/vocab-ish dims sharded over 'data' (ZeRO-3/FSDP
+# storage; all-gathered per layer by GSPMD) and their head/mlp/expert dims
+# over 'model' (Megatron TP / expert parallelism).
+# ---------------------------------------------------------------------------
+
+BASE_RULES: Dict[str, Any] = {
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,          # decode long-context override shards this
+    "embed_act": None,
+    "vocab_act": "model",
+    # --- params ---
+    "embed": "data",         # param storage sharding (FSDP-style)
+    "vocab": "model",
+    "heads": "model",        # q/o in (kv_eff, group) layout: kv_eff dim
+    "kv_heads": None,        # raw kv weights stay replicated on model;
+                             # the in-graph repeat produces kv_eff sharded
+    "kv_heads_eff": "model",
+    "q_group": None,
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "expert_in": "data",     # within-expert storage sharding
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "layers": None,          # scanned-layer leading dim
+    "conv": None,
+    "frontend_seq": None,
+}
+
+
+def rules_for(arch, shape_kind: str, *, overrides: Optional[Dict[str, Any]]
+              = None) -> Dict[str, Any]:
+    """Resolve the rule table for an (arch x shape) cell.
+
+    decode with global_batch < dp_size gets its KV-cache sequence dim
+    sharded over 'data' instead (long_500k: batch=1), so the data axis
+    contributes memory+compute instead of idling.
+    """
+    rules = dict(BASE_RULES)
+    if shape_kind == "decode":
+        rules["kv_seq"] = None  # default: batch carries 'data'
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def long_context_overrides() -> Dict[str, Any]:
+    """batch=1 decode: shard the KV/state sequence dim over 'data'."""
+    return {"batch": None, "kv_seq": "data"}
+
+
+# ---------------------------------------------------------------------------
+# Logical partition specs + activation sharding hints
+# ---------------------------------------------------------------------------
+
+def resolve_spec(axes: Tuple[Optional[str], ...], rules: Dict[str, Any],
+                 mesh_axis_names: Tuple[str, ...]):
+    """Map logical axis names to a PartitionSpec under ``rules``.
+
+    Mesh axes absent from the current mesh are dropped; a mesh axis may
+    appear at most once per spec (first dim wins)."""
+    from jax.sharding import PartitionSpec
+
+    used = set()
+    out = []
+    for ax in axes:
+        entry = rules.get(ax) if ax is not None else None
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        names = [n for n in names if n in mesh_axis_names and n not in used]
+        used.update(names)
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(tuple(names))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+_HINTS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_hints(rules: Dict[str, Any], mesh):
+    """While active, shard_hint() pins activations via the given rules.
+    Model code stays mesh-agnostic: it names logical axes only; tests and
+    single-device runs see a no-op."""
+    prev = getattr(_HINTS, "ctx", None)
+    _HINTS.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _HINTS.ctx = prev
+
+
+def shard_hint(x, *axes: Optional[str]):
+    ctx = getattr(_HINTS, "ctx", None)
+    if ctx is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding
+
+    rules, mesh = ctx
+    spec = resolve_spec(axes, rules, mesh.axis_names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

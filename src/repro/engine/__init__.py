@@ -1,0 +1,5 @@
+from .expr import Col, Expr, Lit, col, lit
+from .pipeline import ExecStats, JoinSpec, Query, execute
+
+__all__ = ["Col", "ExecStats", "Expr", "JoinSpec", "Lit", "Query", "col",
+           "execute", "lit"]

@@ -1,0 +1,75 @@
+"""Send/Recv (paper §6.1): inter-node data movement as jax collectives.
+
+The paper's Send operator 'segments data such that all alike values are
+sent to the same node, so each node computes full results independently' --
+that is exactly an all_to_all resegmentation under shard_map. Broadcast
+(replicating a small build side) is an all_gather. The optimizer picks
+between co-located (no exchange), resegment, and broadcast (planner/cost).
+
+These run on whatever mesh the caller provides -- tests use an 8-device CPU
+mesh; the training stack reuses the same pattern for MoE expert dispatch
+(models/moe.py 'a2a' mode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def resegment(mesh: Mesh, axis: str, cols: Dict[str, jax.Array],
+              dest: jax.Array, capacity: int
+              ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Move each row to the shard ``dest[i]`` (hash-segmentation target).
+
+    Returns (columns, valid) with per-shard static capacity; overflow
+    drops (callers size capacity via the planner's stats). One all_to_all
+    per column -- each tuple crosses the wire exactly once."""
+    n_shards = mesh.shape[axis]
+
+    def local(dest_l, *vals):
+        # dest_l: (n_local,) destination shard per local row
+        n_local = dest_l.shape[0]
+        per = capacity // n_shards
+        # slot of each row within its destination bucket
+        onehot = jax.nn.one_hot(dest_l, n_shards, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)[
+            jnp.arange(n_local), dest_l]
+        keep = pos < per
+        out_valid = jnp.zeros((n_shards, per), jnp.bool_)
+        out_valid = out_valid.at[dest_l, jnp.where(keep, pos, per - 1)].set(
+            keep)
+        outs = []
+        for v in vals:
+            buf = jnp.zeros((n_shards, per), v.dtype)
+            buf = buf.at[dest_l, jnp.where(keep, pos, per - 1)].set(
+                jnp.where(keep, v, 0))
+            outs.append(jax.lax.all_to_all(buf, axis, 0, 0, tiled=False))
+        vr = jax.lax.all_to_all(out_valid, axis, 0, 0, tiled=False)
+        return tuple(o.reshape(-1) for o in outs) + (vr.reshape(-1),)
+
+    names = list(cols)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis),) * (1 + len(names)),
+                   out_specs=(P(axis),) * (len(names) + 1))
+    res = fn(dest, *[cols[c] for c in names])
+    out = dict(zip(names, res[:-1]))
+    return out, res[-1]
+
+
+def broadcast_build_side(mesh: Mesh, axis: str,
+                         cols: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Replicate a (small) build side to every shard: all_gather."""
+    def local(*vals):
+        return tuple(jax.lax.all_gather(v, axis, tiled=True) for v in vals)
+
+    names = list(cols)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis),) * len(names),
+                   out_specs=(P(),) * len(names))
+    return dict(zip(names, fn(*[cols[c] for c in names])))

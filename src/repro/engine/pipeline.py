@@ -1,0 +1,331 @@
+"""Query pipeline: logical query -> chosen plan -> execution (paper §6).
+
+A Query is the logical algebra (scan/filter/join/groupby/sort/limit); the
+planner (planner/planner.py) picks the projection, join strategy, SIP
+filters and GroupBy algorithm; this module runs the physical plan over a
+VerticaDB's live nodes and returns numpy results.
+
+Runtime algorithm switching (§6.1): the GroupBy starts on the planner's
+choice but falls back from dense-hash to sort-based when the observed key
+domain exceeds the table budget -- the paper's hash->sort-merge switch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.database import VerticaDB
+from ..core.encodings import Encoding
+from .expr import Col, Expr
+from . import operators as ops
+from .sip import sip_filter
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinSpec:
+    dim_table: str
+    fact_key: str
+    dim_key: str
+    dim_columns: Tuple[str, ...] = ()
+    dim_predicate: Optional[Expr] = None
+    how: str = "inner"
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    table: str
+    columns: Tuple[str, ...] = ()
+    predicate: Optional[Expr] = None
+    join: Optional[JoinSpec] = None
+    group_by: Optional[str] = None
+    aggs: Tuple[Tuple[str, str, str], ...] = ()   # (out, col, kind)
+    order_by: Optional[str] = None
+    descending: bool = False
+    limit: Optional[int] = None
+
+    def needed_columns(self) -> set:
+        need = set(self.columns)
+        if self.predicate is not None:
+            need |= self.predicate.columns()
+        if self.group_by:
+            need.add(self.group_by)
+        for _, c, kind in self.aggs:
+            if kind != "count":
+                need.add(c)
+        if self.join:
+            need.add(self.join.fact_key)
+        if self.order_by and self.order_by not in {a[0] for a in self.aggs}:
+            need.add(self.order_by)
+        return need
+
+
+@dataclasses.dataclass
+class ExecStats:
+    projection: str = ""
+    groupby_algorithm: str = ""
+    join_strategy: str = ""
+    containers_scanned: int = 0
+    blocks_pruned: int = 0
+    blocks_total: int = 0
+    rows_scanned: int = 0
+    sip_applied: bool = False
+    wall_s: float = 0.0
+
+
+def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
+            plan=None) -> Tuple[Dict[str, np.ndarray], ExecStats]:
+    """Run a query. ``plan`` (from planner.plan_query) may be supplied;
+    otherwise the planner is invoked."""
+    from ..planner.planner import plan_query
+
+    t0 = time.time()
+    plan = plan or plan_query(db, q)
+    stats = ExecStats(projection=plan.projection,
+                      groupby_algorithm=plan.groupby_algorithm,
+                      join_strategy=plan.join_strategy)
+    as_of = as_of if as_of is not None else db.epochs.latest_queryable()
+
+    # --- scalar COUNT directly on RLE runs (predicate on sort leader) ---
+    if plan.scalar_rle:
+        res = _rle_scalar_count(db, q, plan, as_of)
+        if res is not None:
+            stats.groupby_algorithm = "rle-scalar"
+            stats.wall_s = time.time() - t0
+            return res, stats
+
+    # --- RLE-direct fast path: aggregate on encoded data, zero decode ---
+    if plan.groupby_algorithm == "rle" and q.join is None \
+            and q.predicate is None:
+        res = _rle_groupby(db, q, plan, as_of)
+        if res is not None:
+            stats.wall_s = time.time() - t0
+            return res, stats
+        stats.groupby_algorithm = "sort (rle fallback)"
+        plan = dataclasses.replace(plan, groupby_algorithm="sort")
+
+    # --- build side + SIP (§6.1) ---
+    sip = None
+    build = None
+    if q.join is not None:
+        dim_rows = db.read_table(q.join.dim_table, as_of=as_of)
+        if q.join.dim_predicate is not None:
+            m = np.asarray(q.join.dim_predicate(dim_rows), bool)
+            dim_rows = {c: v[m] for c, v in dim_rows.items()}
+        build = {c: jnp.asarray(dim_rows[c])
+                 for c in (q.join.dim_key,) + tuple(q.join.dim_columns)}
+        if plan.use_sip:
+            sip = sip_filter(build[q.join.dim_key], q.join.fact_key)
+            stats.sip_applied = True
+
+    # --- scan (SMA pruning + predicate + SIP pushed down) ---
+    need = q.needed_columns() | ({q.join.fact_key} if q.join else set())
+    proj = db.catalog.projections[plan.projection]
+    need &= set(proj.columns)
+    scans = []
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        for c in store.containers:
+            epoch_ok = c.epochs <= as_of
+            deleted = store.deleted_mask(c, as_of) | ~epoch_ok
+            r = ops.scan_container(c, sorted(need), q.predicate,
+                                   deleted=deleted, sip=sip)
+            if r is not None:
+                scans.append(r)
+                stats.containers_scanned += 1
+        # WOS rows participate too (unencoded scan)
+        data, eps, _ = store.wos.snapshot()
+        if len(eps):
+            dels = (np.concatenate(store.wos_delete_epochs)
+                    if store.wos_delete_epochs
+                    else np.zeros(len(eps), np.int64))
+            vis = (eps <= as_of) & ~((dels > 0) & (dels <= as_of))
+            cols = {c: jnp.asarray(data[c]) for c in need}
+            valid = jnp.asarray(vis)
+            if q.predicate is not None:
+                valid = valid & jnp.asarray(q.predicate(cols), bool)
+            if sip is not None:
+                valid = valid & sip(cols)
+            scans.append(ops.ScanResult(cols, valid))
+    merged = ops.concat_scans(scans)
+    if merged is None:
+        # fully pruned / empty: return a structured empty result
+        stats.wall_s = time.time() - t0
+        out = {c: np.zeros(0, np.int64) for c in q.columns}
+        if q.group_by:
+            out[q.group_by] = np.zeros(0, np.int64)
+            out["group_count"] = np.zeros(0, np.int64)
+        for name, _, kind in q.aggs:
+            out[name] = (np.zeros(1) if q.group_by is None
+                         else np.zeros(0))
+        return out, stats
+    stats.blocks_pruned = merged.pruned_blocks
+    stats.blocks_total = merged.total_blocks
+    cols, valid = dict(merged.columns), merged.valid
+    stats.rows_scanned = int(cols[next(iter(cols))].shape[0])
+
+    # --- join ---
+    if q.join is not None:
+        cols, valid = ops.hash_join(build, q.join.dim_key, cols,
+                                    q.join.fact_key, valid, how=q.join.how)
+
+    # --- groupby / aggregate ---
+    if q.group_by is not None or q.aggs:
+        out = _run_groupby(q, plan, cols, valid, stats)
+    else:
+        mask = np.asarray(valid)
+        out = {c: np.asarray(v)[mask] for c, v in cols.items()
+               if c in q.columns or not q.columns}
+        if q.order_by:
+            order = np.argsort(out[q.order_by])
+            if q.descending:
+                order = order[::-1]
+            out = {c: v[order] for c, v in out.items()}
+        if q.limit:
+            out = {c: v[: q.limit] for c, v in out.items()}
+    stats.wall_s = time.time() - t0
+    return out, stats
+
+
+def _rle_scalar_count(db: VerticaDB, q: Query, plan, as_of: int
+                      ) -> Optional[Dict[str, np.ndarray]]:
+    """COUNT(*) with a range predicate on the RLE-encoded sort leader:
+    sum run lengths whose value passes -- O(runs), no decode (§6.1; the
+    Pallas twin is kernels/rle_scan_agg.py)."""
+    from .expr import exact_int_interval
+
+    proj = db.catalog.projections[plan.projection]
+    leader = proj.sort_order[0]
+    if q.predicate is not None:
+        iv = exact_int_interval(q.predicate)
+        if iv is None or iv[0] != leader:
+            return None
+        _, lo, hi = iv
+    else:
+        lo = hi = None
+    lo = -np.inf if lo is None else lo
+    hi = np.inf if hi is None else hi
+    total = 0
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        if store.wos.n_rows:
+            return None
+        for c in store.containers:
+            if store.delete_vectors.get(c.id) or (c.epochs > as_of).any():
+                return None
+            colenc = c.columns[leader]
+            if colenc.encoding != Encoding.RLE:
+                return None
+            rv = colenc.arrays["run_values"].reshape(-1)
+            rl = colenc.arrays["run_lengths"].reshape(-1)
+            m = (rv >= lo) & (rv <= hi) & (rl > 0)
+            cnt = int(rl[m].sum())
+            pad = colenc.n_blocks * colenc.block_rows - c.n_rows
+            if pad and c.n_rows:
+                last = rv[np.flatnonzero(rl)[-1]]
+                if lo <= last <= hi:
+                    cnt -= pad
+            total += cnt
+    out = {}
+    for name, _, _ in q.aggs:
+        out[name] = np.asarray([total])
+    return out
+
+
+def _rle_groupby(db: VerticaDB, q: Query, plan, as_of: int
+                 ) -> Optional[Dict[str, np.ndarray]]:
+    """COUNT GROUP BY key straight off RLE runs (§6.1 'operate directly on
+    encoded data'). Requires no pending deletes and fully-committed
+    containers; otherwise returns None and the caller decodes."""
+    from ..planner.planner import _domain_estimate
+
+    proj = db.catalog.projections[plan.projection]
+    dom = _domain_estimate(db, proj, q.group_by)
+    if dom is None or dom > plan.dense_domain_limit:
+        return None
+    total = np.zeros(dom, np.int64)
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        if store.wos.n_rows:
+            return None
+        for c in store.containers:
+            if store.delete_vectors.get(c.id) or (c.epochs > as_of).any():
+                return None
+            if c.columns[q.group_by].encoding != Encoding.RLE:
+                return None
+            counts = ops.groupby_rle(c.columns[q.group_by],
+                                     c.smas[q.group_by].counts, dom)
+            # subtract tail-block padding (pad value = last value)
+            total += np.asarray(counts["group_count"])
+            pad = c.columns[q.group_by].n_blocks * \
+                c.columns[q.group_by].block_rows - c.n_rows
+            if pad and c.n_rows:
+                last = int(c.decode_column(q.group_by)[-1])
+                total[last] -= pad
+    sel = total > 0
+    out = {q.group_by: np.flatnonzero(sel), "group_count": total[sel]}
+    for name, _, kind in q.aggs:
+        if kind == "count":
+            out[name] = total[sel]
+    return out
+
+
+def _run_groupby(q: Query, plan, cols, valid, stats) -> Dict[str, np.ndarray]:
+    aggs = tuple(q.aggs)
+    values = {c: cols[c] for _, c, kind in aggs if kind != "count"
+              for c in [c]}
+    if q.group_by is None:
+        # scalar aggregate: single group
+        keys = jnp.zeros(valid.shape[0], jnp.int32)
+        res = ops.groupby_dense(keys, valid, values, 1, aggs)
+        return {name: np.asarray(v)[:1] for name, v in res.items()}
+
+    keys = cols[q.group_by]
+    algo = plan.groupby_algorithm
+    if algo == "rle":
+        algo = "sort"
+    if not bool(valid.any()):
+        out = {q.group_by: np.zeros(0, np.int64),
+               "group_count": np.zeros(0, np.int64)}
+        for name, _, _ in aggs:
+            out[name] = np.zeros(0)
+        return out
+    if algo == "dense":
+        big = int(jnp.iinfo(keys.dtype).max) if keys.dtype.kind == "i" \
+            else 2**30
+        kmin = int(jnp.where(valid, keys, big).min()) if valid.shape[0] \
+            else 0
+        kmax = int(jnp.where(valid, keys, -big).max()) if valid.shape[0] \
+            else 0
+        domain = kmax - min(kmin, 0) + 1
+        if domain > plan.dense_domain_limit:
+            algo = "sort"   # runtime switch (§6.1)
+            stats.groupby_algorithm = "sort (runtime switch)"
+    if algo == "dense":
+        res = ops.groupby_dense(keys.astype(jnp.int32), valid, values,
+                                int(domain), aggs)
+        counts = np.asarray(res["group_count"])
+        sel = counts > 0
+        out = {q.group_by: np.flatnonzero(sel),
+               "group_count": counts[sel]}
+        for name, _, _ in aggs:
+            out[name] = np.asarray(res[name])[sel]
+    else:
+        res = ops.groupby_sort(keys, valid, values, plan.max_groups, aggs)
+        n = int(res["n_groups"])
+        out = {q.group_by: np.asarray(res["group_keys"])[:n],
+               "group_count": np.asarray(res["group_count"])[:n]}
+        for name, _, _ in aggs:
+            out[name] = np.asarray(res[name])[:n]
+    if q.order_by:
+        key = out.get(q.order_by, out.get(q.group_by))
+        order = np.argsort(key)
+        if q.descending:
+            order = order[::-1]
+        out = {c: v[order] for c, v in out.items()}
+    if q.limit:
+        out = {c: v[: q.limit] for c, v in out.items()}
+    return out

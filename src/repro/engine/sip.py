@@ -1,0 +1,55 @@
+"""Sideways Information Passing (paper §6.1): semi-join filters built from a
+hash join's build side, pushed into the probe-side Scan so non-joining rows
+never flow up the plan.
+
+Filter = a Bloom-style bit array over the build keys; the Scan ANDs the
+probe membership test into its row mask. kernels/sip_bloom.py is the Pallas
+twin (fused probe inside the scan kernel).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# 32-bit mixers (jax default runtime is 32-bit; Knuth/xxhash-style salts)
+_SALTS = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D)
+
+
+def _hash(keys: jax.Array, salt: int, bits: int) -> jax.Array:
+    h = keys.astype(jnp.uint32) * jnp.uint32(salt)
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(0x27D4EB2F)
+    h = h ^ (h >> jnp.uint32(13))
+    return (h % jnp.uint32(bits)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits", "k"))
+def bloom_build(keys: jax.Array, bits: int = 1 << 16, k: int = 2):
+    bitarr = jnp.zeros(bits, jnp.bool_)
+    for i in range(k):
+        bitarr = bitarr.at[_hash(keys, _SALTS[i], bits)].set(True)
+    return bitarr
+
+
+@partial(jax.jit, static_argnames=("k",))
+def bloom_probe(bitarr: jax.Array, keys: jax.Array, k: int = 2):
+    bits = bitarr.shape[0]
+    ok = jnp.ones(keys.shape, jnp.bool_)
+    for i in range(k):
+        ok &= bitarr[_hash(keys, _SALTS[i], bits)]
+    return ok
+
+
+def sip_filter(build_keys: jax.Array, probe_column: str,
+               bits: int = 1 << 16) -> Callable[[Dict], jax.Array]:
+    """Build a SIP filter closure for Scan (probe col -> row mask)."""
+    bitarr = bloom_build(build_keys, bits)
+
+    def apply(cols: Dict) -> jax.Array:
+        return bloom_probe(bitarr, cols[probe_column])
+
+    return apply

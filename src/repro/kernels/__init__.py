@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots the paper optimizes:
+encoded-data scans/aggregates (RLE, delta), the prepass GroupBy table, SIP
+join filters -- plus blocked attention for the LM serving stack.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated against
+ref.py oracles in interpret mode; ops.py is the dispatching public API.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,36 @@
+"""DELTA_RANGE block decode Pallas kernel: in-VMEM prefix scan.
+
+Decode is fused into consumers on real pipelines; standalone it shows the
+structure: one block strip per grid step, cumsum along the 128-lane axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(first_ref, deltas_ref, out_ref):
+    d = deltas_ref[...].astype(jnp.float32)            # (1, B)
+    first = first_ref[...].astype(jnp.float32)         # (1, 1)
+    out_ref[...] = first + jnp.cumsum(d, axis=1) - d[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_decode(first: jax.Array, deltas: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """first (nb, 1), deltas (nb, B) -> values (nb, B) f32."""
+    nb, B = deltas.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, B), jnp.float32),
+        interpret=interpret,
+    )(first, deltas)

@@ -1,0 +1,49 @@
+"""Prepass GroupBy Pallas kernel: the paper's 'L1-cache-sized hash table'
+pre-aggregation (§6.1), rethought for the MXU.
+
+TPU adaptation (DESIGN.md): instead of a chasing-pointers hash table, the
+VMEM-resident dense table is built by a ONE-HOT CONTRACTION -- the (B x
+domain) one-hot of the keys hits the systolic array as a matmul, producing
+per-block (count, sum) partials that a cheap tree-combine finishes. Domain
+is capped so the table tiles VMEM (<= 1024 here), exactly mirroring the
+paper's 'when the table fills, emit partials and start afresh'.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(keys_ref, vals_ref, out_ref, *, domain: int):
+    k = keys_ref[...]                                  # (1, B) int32
+    v = vals_ref[...].astype(jnp.float32)              # (1, B)
+    B = k.shape[1]
+    # one-hot via broadcasted iota compare: (B, domain)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, domain), 1)
+    onehot = (k.reshape(B, 1) == cols).astype(jnp.float32)
+    cnt = jnp.ones((1, B), jnp.float32) @ onehot       # (1, domain)  MXU
+    s = v @ onehot                                     # (1, domain)  MXU
+    out_ref[0, :, 0] = cnt[0]
+    out_ref[0, :, 1] = s[0]
+
+
+@functools.partial(jax.jit, static_argnames=("domain", "interpret"))
+def onehot_groupby(keys: jax.Array, values: jax.Array, *, domain: int,
+                   interpret: bool = False) -> jax.Array:
+    """keys/values (nb, B) -> per-block partials (nb, domain, 2)."""
+    assert domain <= 1024, "prepass table must fit VMEM; combine upstream"
+    nb, B = keys.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, domain=domain),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, domain, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, domain, 2), jnp.float32),
+        interpret=interpret,
+    )(keys.astype(jnp.int32), values)

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy (honest about the runtime, per DESIGN.md):
+  * on TPU           -> compiled Pallas kernels
+  * on CPU (tests)   -> interpret=True (kernel body executed in Python,
+                        validating the kernel logic itself)
+  * ``force_ref=True`` -> the pure-jnp oracle (kernels/ref.py)
+
+The dry-run lowers the XLA-path models (use_pallas=False) so the 512-device
+CPU compile succeeds; on real TPU hardware the same ops.py calls flip to the
+kernels with no model changes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .delta_decode import delta_decode as _delta_decode
+from .flash_attention import flash_attention as _flash_attention
+from .hash_groupby import onehot_groupby as _onehot_groupby
+from .rle_scan_agg import rle_filter_agg as _rle_filter_agg
+from .sip_probe import semijoin_probe as _semijoin_probe
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rle_filter_agg(run_values, run_lengths, *, lo, hi, force_ref=False):
+    if force_ref:
+        return ref.rle_filter_agg_ref(run_values, run_lengths, lo, hi)
+    return _rle_filter_agg(run_values, run_lengths, lo=lo, hi=hi,
+                           interpret=not _on_tpu())
+
+
+def onehot_groupby(keys, values, *, domain, force_ref=False):
+    if force_ref:
+        return ref.onehot_groupby_ref(keys, values, domain)
+    return _onehot_groupby(keys, values, domain=domain,
+                           interpret=not _on_tpu())
+
+
+def delta_decode(first, deltas, *, force_ref=False):
+    if force_ref:
+        return ref.delta_decode_ref(first, deltas)
+    return _delta_decode(first, deltas, interpret=not _on_tpu())
+
+
+def semijoin_probe(keys, build, *, force_ref=False):
+    if force_ref:
+        return ref.semijoin_probe_ref(keys, build)
+    return _semijoin_probe(keys, build, interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    force_ref=False):
+    """Batched/multi-head wrapper: q (..., S, d), k/v (..., T, d)."""
+    if force_ref:
+        fn = functools.partial(ref.flash_attention_ref, causal=causal)
+    else:
+        fn = functools.partial(_flash_attention, causal=causal, bq=bq,
+                               bk=bk, interpret=not _on_tpu())
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rle_filter_agg_ref(run_values: jax.Array, run_lengths: jax.Array,
+                       lo: float, hi: float) -> jax.Array:
+    """Per-block (count, sum, max) of rows with lo <= value <= hi, computed
+    on RLE runs: a run contributes len rows and len*value sum.
+    run_values/run_lengths: (nb, R). Returns (nb, 3) f32."""
+    rv = run_values.astype(jnp.float32)
+    rl = run_lengths.astype(jnp.float32)
+    m = ((rv >= lo) & (rv <= hi) & (rl > 0)).astype(jnp.float32)
+    cnt = (rl * m).sum(axis=1)
+    s = (rv * rl * m).sum(axis=1)
+    mx = jnp.where(m > 0, rv, -jnp.inf).max(axis=1)
+    return jnp.stack([cnt, s, mx], axis=1)
+
+
+def onehot_groupby_ref(keys: jax.Array, values: jax.Array,
+                       domain: int) -> jax.Array:
+    """Per-block dense partial GroupBy (count+sum) via one-hot contraction.
+    keys (nb, B) int32, values (nb, B) f32 -> (nb, domain, 2) f32."""
+    onehot = jax.nn.one_hot(keys, domain, dtype=jnp.float32)  # (nb,B,dom)
+    cnt = onehot.sum(axis=1)
+    s = jnp.einsum("nbd,nb->nd", onehot, values.astype(jnp.float32))
+    return jnp.stack([cnt, s], axis=-1)
+
+
+def delta_decode_ref(first: jax.Array, deltas: jax.Array) -> jax.Array:
+    """DELTA_RANGE block decode: first (nb, 1), deltas (nb, B) ->
+    values (nb, B) where v[0]=first, v[i]=v[i-1]+deltas[i]."""
+    d = deltas.astype(jnp.float32)
+    return first.astype(jnp.float32) + jnp.cumsum(d, axis=1) - d[:, :1]
+
+
+def semijoin_probe_ref(keys: jax.Array, build: jax.Array) -> jax.Array:
+    """Exact semi-join membership: keys (nb, B) int32 vs build (S,) int32
+    (padded with -1) -> bool (nb, B)."""
+    eq = keys[..., None] == build[None, None, :]
+    return eq.any(axis=-1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q (S, d), k/v (T, d) -> (S, d); fp32 softmax."""
+    d = q.shape[-1]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / np.sqrt(d)
+    if causal:
+        S, T = s.shape
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

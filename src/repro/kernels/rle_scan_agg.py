@@ -1,0 +1,54 @@
+"""Fused RLE scan->filter->aggregate Pallas kernel.
+
+The paper's flagship 'operate directly on encoded data' (§6.1): a scan over
+an RLE column evaluates the predicate per RUN and aggregates len-weighted
+contributions -- O(runs) work and O(runs) HBM bytes instead of O(rows).
+On TPU this turns the encoding ratio directly into memory-roofline headroom
+(DESIGN.md hardware-adaptation table).
+
+Tiling: grid over blocks; each step holds one block's (run_values,
+run_lengths) strip in VMEM -- R is padded to a multiple of 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(rv_ref, rl_ref, out_ref, *, lo: float, hi: float):
+    rv = rv_ref[...].astype(jnp.float32)          # (1, R)
+    rl = rl_ref[...].astype(jnp.float32)
+    m = ((rv >= lo) & (rv <= hi) & (rl > 0)).astype(jnp.float32)
+    cnt = (rl * m).sum()
+    s = (rv * rl * m).sum()
+    mx = jnp.where(m > 0, rv, -jnp.inf).max()
+    out_ref[0, 0] = cnt
+    out_ref[0, 1] = s
+    out_ref[0, 2] = mx
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "interpret"))
+def rle_filter_agg(run_values: jax.Array, run_lengths: jax.Array, *,
+                   lo: float, hi: float,
+                   interpret: bool = False) -> jax.Array:
+    """(nb, R) runs -> (nb, 3) [count, sum, max] of rows in [lo, hi]."""
+    nb, R = run_values.shape
+    pad = (-R) % 128
+    if pad:
+        run_values = jnp.pad(run_values, ((0, 0), (0, pad)))
+        run_lengths = jnp.pad(run_lengths, ((0, 0), (0, pad)))
+        R += pad
+    return pl.pallas_call(
+        functools.partial(_kernel, lo=lo, hi=hi),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, R), lambda i: (i, 0)),
+            pl.BlockSpec((1, R), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 3), jnp.float32),
+        interpret=interpret,
+    )(run_values, run_lengths)

@@ -1,0 +1,48 @@
+"""SIP semi-join probe Pallas kernel (§6.1 Sideways Information Passing).
+
+The join build side (small dimension keys, padded to a lane multiple) sits
+in VMEM; each grid step tests one block of probe keys against all of it
+with a broadcast compare + any-reduce. Exact (not Bloom): on TPU the
+build side fits VMEM wholesale, so the approximate filter is unnecessary --
+an intentional deviation recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_BUILD = 4096   # keys; 16KB of VMEM
+
+
+def _kernel(keys_ref, build_ref, out_ref):
+    k = keys_ref[...]                                  # (1, B)
+    b = build_ref[...]                                 # (1, S)
+    eq = k.reshape(-1, 1) == b.reshape(1, -1)          # (B, S)
+    out_ref[...] = eq.any(axis=1).reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def semijoin_probe(keys: jax.Array, build: jax.Array, *,
+                   interpret: bool = False) -> jax.Array:
+    """keys (nb, B) int32, build (S,) int32 (pad with -1) -> bool (nb, B)."""
+    nb, B = keys.shape
+    S = build.shape[0]
+    assert S <= MAX_BUILD, "chunk the build side upstream"
+    pad = (-S) % 128
+    if pad:
+        build = jnp.pad(build, (0, pad), constant_values=-1)
+        S += pad
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, S), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, B), jnp.bool_),
+        interpret=interpret,
+    )(keys.astype(jnp.int32), build.astype(jnp.int32).reshape(1, -1))

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+backend initialization, and this process needs 512 placeholder CPU devices
+to build the production meshes. (Smoke tests and benchmarks run in normal
+1-device processes; only the dry-run sets this flag.)
+
+Per cell we record into results/dryrun/<cell>.json:
+  memory_analysis   -- proves the step fits per-device HBM
+  cost_analysis     -- per-device HLO FLOPs / bytes (roofline inputs)
+  collective bytes  -- parsed from the post-SPMD HLO text
+  the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --sweep            # all cells, both meshes
+  python -m repro.launch.dryrun --sweep --multi-pod-only
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .. import configs
+from ..configs.base import SHAPES_BY_NAME, RunConfig, ShapeConfig
+from ..distributed.sharding import (BASE_RULES, activation_hints,
+                                    long_context_overrides, rules_for)
+from ..models.model import build_model, cache_partition_axes
+from ..models.params import logical_axes, resolve_spec
+from ..train.train_step import (abstract_train_state, make_train_step,
+                                train_state_axes)
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+from .roofline_math import analyze, model_flops
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _axes_leaf(x) -> bool:
+    """True for logical-axes tuples like ('embed','mlp') or () -- but not for
+    NamedTuples (OptState) which must be traversed."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(isinstance(a, (str, type(None))) for a in x))
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "frames": ("batch", "seq", "embed_act"),
+    "image_embeds": ("batch", "frontend_seq", "embed_act"),
+}
+
+
+def _spec_tree_for_inputs(specs: Dict[str, Any], model, shape: ShapeConfig,
+                          rules, mesh) -> Dict[str, Any]:
+    """Build the in_shardings pytree matching model.input_specs output."""
+    names = mesh.axis_names
+
+    def batch_axes_tree(batch):
+        return {k: resolve_spec(_BATCH_AXES[k], rules, names)
+                for k in batch}
+
+    out: Dict[str, Any] = {}
+    if "batch" in specs:
+        out["batch"] = batch_axes_tree(specs["batch"])
+    if "cache" in specs:
+        axes = cache_partition_axes(model, shape.global_batch, shape.seq_len)
+        out["cache"] = jax.tree.map(
+            lambda a: resolve_spec(a, rules, names), axes,
+            is_leaf=_axes_leaf)
+        out["tokens"] = resolve_spec(("batch", "seq"), rules, names)
+        out["pos"] = PartitionSpec()
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), out,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             rules_overrides: Optional[Dict[str, Any]] = None,
+             rc: Optional[RunConfig] = None, moe_dispatch: Optional[str]
+             = None, kv_quant: bool = False, save: bool = True,
+             tag: str = "baseline") -> Dict[str, Any]:
+    import dataclasses as _dc
+
+    cfg = configs.get(arch)
+    if moe_dispatch and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               dispatch=moe_dispatch))
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = cfg.supports_shape(shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "tag": tag,
+        "multi_pod": multi_pod, "time": time.strftime("%F %T"),
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _save(rec, save)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    rc = rc or RunConfig()
+    model = build_model(cfg, tp=tp, remat=rc.remat_policy,
+                        kv_quant=kv_quant)
+    rules = rules_for(cfg, shape.kind, overrides=rules_overrides)
+    if shape.name == "long_500k":
+        rules.update(long_context_overrides())
+        if rules_overrides:
+            rules.update(rules_overrides)
+    names = mesh.axis_names
+
+    t0 = time.time()
+    try:
+      with activation_hints(rules, mesh):
+        inputs = model.input_specs(shape)
+        in_specs = _spec_tree_for_inputs(inputs, model, shape, rules, mesh)
+
+        if shape.kind == "train":
+            state = abstract_train_state(model)
+            st_axes = train_state_axes(model)
+            st_specs = jax.tree.map(
+                lambda a: NamedSharding(mesh, resolve_spec(a, rules, names)),
+                st_axes, is_leaf=_axes_leaf)
+            step = make_train_step(model, rc)
+            jitted = jax.jit(step,
+                             in_shardings=(st_specs, in_specs["batch"]),
+                             out_shardings=(st_specs, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, inputs["batch"])
+        elif shape.kind == "prefill":
+            p_axes = logical_axes(model.decls)
+            p_specs = jax.tree.map(
+                lambda a: NamedSharding(mesh, resolve_spec(a, rules, names)),
+                p_axes, is_leaf=_axes_leaf)
+            from ..models.params import abstract_params
+            params = abstract_params(model.decls, jnp.bfloat16)
+            jitted = jax.jit(model.prefill,
+                             in_shardings=(p_specs, in_specs["batch"]))
+            lowered = jitted.lower(params, inputs["batch"])
+        else:  # decode
+            p_axes = logical_axes(model.decls)
+            p_specs = jax.tree.map(
+                lambda a: NamedSharding(mesh, resolve_spec(a, rules, names)),
+                p_axes, is_leaf=_axes_leaf)
+            from ..models.params import abstract_params
+            params = abstract_params(model.decls, jnp.bfloat16)
+            jitted = jax.jit(
+                model.decode_step,
+                in_shardings=(p_specs, in_specs["cache"],
+                              in_specs["tokens"], in_specs["pos"]),
+                out_shardings=(None, in_specs["cache"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params, inputs["cache"],
+                                   inputs["tokens"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        hc = analyze_hlo(hlo)  # loop-aware: xla cost_analysis counts each
+        #                        while body once (see hlo_cost.py docstring)
+        mflops = model_flops(cfg, shape)
+        roof = analyze(hc, mflops, n_chips)
+
+        mem_rec = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_rec[attr] = int(v)
+
+        rec.update(
+            status="ok", n_chips=n_chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            hlo_flops_per_device=roof.hlo_flops,
+            hlo_bytes_per_device=roof.hlo_bytes,
+            collective_bytes_per_device=roof.coll_bytes,
+            collective_s_bf16wire=hc.coll_bf16_wire / 50e9,
+            collectives={k: v for k, v in hc.coll.items() if v},
+            unknown_trip_counts=hc.unknown_trip,
+            model_flops=mflops,
+            compute_s=roof.compute_s, memory_s=roof.memory_s,
+            collective_s=roof.collective_s, dominant=roof.dominant,
+            useful_flops_ratio=round(roof.useful_ratio, 4),
+            roofline_fraction=round(roof.roofline_fraction, 4),
+            memory_analysis=mem_rec,
+            xla_cost_analysis={k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float))
+                               and k in ("flops", "bytes accessed")}
+            if cost else {},
+        )
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"({'2x16x16' if multi_pod else '16x16'}): "
+              f"dominant={roof.dominant} "
+              f"frac={roof.roofline_fraction:.3f} "
+              f"useful={roof.useful_ratio:.3f} "
+              f"compile={t_compile:.0f}s", flush=True)
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} x {shape_name} FAILED: {e}", flush=True)
+    _save(rec, save)
+    return rec
+
+
+def _save(rec: Dict[str, Any], save: bool):
+    if not save:
+        return
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "pod2" if rec["multi_pod"] else "pod1"
+    name = f"{rec['arch']}--{rec['shape']}--{mesh_tag}--{rec['tag']}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--moe-dispatch", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.sweep:
+        pods = [False, True]
+        if args.multi_pod_only:
+            pods = [True]
+        if args.single_pod_only:
+            pods = [False]
+        for mp in pods:
+            for arch in configs.ARCH_NAMES:
+                for shape in ("train_4k", "prefill_32k", "decode_32k",
+                              "long_500k"):
+                    mesh_tag = "pod2" if mp else "pod1"
+                    f = RESULTS_DIR / (f"{arch}--{shape}--{mesh_tag}--"
+                                       f"{args.tag}.json")
+                    if args.skip_existing and f.exists():
+                        prev = json.loads(f.read_text())
+                        if prev.get("status") in ("ok", "skipped"):
+                            continue
+                    run_cell(arch, shape, multi_pod=mp, tag=args.tag)
+        return
+    rc = RunConfig(remat_policy=args.remat) if args.remat else None
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod, tag=args.tag,
+             moe_dispatch=args.moe_dispatch, kv_quant=args.kv_quant, rc=rc)
+
+
+if __name__ == "__main__":
+    main()

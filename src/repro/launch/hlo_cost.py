@@ -1,0 +1,376 @@
+"""Loop-aware cost extraction from post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE -- a
+``lax.scan`` over 40 layers reports one layer's FLOPs (verified empirically:
+scan of 8 matmuls reports 2.1e9, not 1.7e10). Every model here scans over
+layers, so the built-in numbers are useless for a roofline. This module
+re-derives per-device costs by walking the HLO call graph and multiplying
+``while`` bodies by their ``known_trip_count`` backend_config.
+
+Cost model (per device):
+  flops  -- 2 * prod(result dims) * prod(lhs contracting dims) per dot,
+            accumulated through fusion-called computations.
+  bytes  -- HBM traffic proxy: for each top-level op in an execution context
+            (ENTRY / while bodies / called computations -- NOT fusion
+            internals, which are register/VMEM-resident), charge result
+            bytes (write) + resolvable operand bytes (reads).
+            dynamic-update-slice is charged 2x the update slice (in-place).
+  coll   -- collective result bytes by op kind (all-reduce charged 2x for
+            the reduce+broadcast ring phases), trip-count multiplied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+# NB: tuple shapes longer than 5 elements carry /*index=N*/ comments, so the
+# tuple alternative must allow '=' inside the parens.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\([^)]*\)|[^,)]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\D{0,12}(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "after-all", "partition-id", "replica-id",
+               "iota", "call", "conditional"}
+
+# Top-level elementwise ops are a CPU-lowering artifact: TPU fuses them into
+# neighboring dots/fusions whose operand/result bytes we already count.
+# Charging their operands would overstate HBM traffic ~20x (measured).
+_ELEMENTWISE = {
+    "convert", "multiply", "add", "subtract", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "negate", "compare", "select",
+    "and", "or", "not", "xor", "tanh", "power", "sqrt", "rsqrt", "log",
+    "log-plus-one", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "clamp", "broadcast", "reshape", "pad", "sine", "cosine", "is-finite",
+    "reduce-precision", "real", "imag", "atan2", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "popcnt", "clz",
+    "stochastic-convert", "erf", "expm1", "log1p", "logistic", "cbrt", "tan",
+}
+
+# Ops whose operand list must not be charged wholesale: they touch only a
+# slice of (possibly huge, scan-carried) operands.
+_SLICE_LIKE = {"dynamic-slice", "slice", "gather"}
+
+
+def shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    line: str
+    operands: List[str]
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    symbols: Dict[str, str]           # %name -> shape str (params + ops)
+    ops: List[Op]
+    param_order: List[str] = dataclasses.field(default_factory=list)
+
+    def root(self) -> Optional[Op]:
+        for op in reversed(self.ops):
+            if op.is_root:
+                return op
+        return self.ops[-1] if self.ops else None
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    entry = None
+    cur: Optional[Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+        if mc:
+            cur = Comp(mc.group(2), {}, [])
+            comps[cur.name] = cur
+            if mc.group(1):
+                entry = cur.name
+            for pname, pshape in _PARAM_RE.findall(mc.group(3)):
+                cur.symbols[pname] = pshape
+                cur.param_order.append(pname)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name, shape, kind = mo.group(1), mo.group(2), mo.group(3)
+        rest = line[mo.end():]
+        paren_end = rest.find(")")
+        operands = _OPERAND_RE.findall(rest[:paren_end if paren_end >= 0
+                                            else len(rest)])
+        cur.symbols[name] = shape
+        cur.ops.append(Op(name, shape, kind, line, operands,
+                          is_root=line.lstrip().startswith("ROOT")))
+    return comps, entry
+
+
+def _dot_flops(comp: Comp, op: Op) -> float:
+    dims = _shape_dims(op.shape)
+    out = 1.0
+    for d in dims:
+        out *= d
+    m = _LHS_CONTRACT_RE.search(op.line)
+    contract = 1.0
+    if m and op.operands:
+        lhs_shape = comp.symbols.get(op.operands[0], "")
+        lhs_dims = _shape_dims(lhs_shape)
+        for i in (int(x) for x in m.group(1).split(",") if x.strip()):
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out * contract
+
+
+def _fusion_bytes(comps: Dict[str, Comp], comp: Comp, op: Op,
+                  calls_name: str) -> float:
+    """HBM traffic of one fusion op, looking inside the called computation.
+
+    Scan bodies pass whole stacked arrays into fusions that slice out one
+    layer's piece (or DUS one piece back in). Charging the full operand
+    would bill the entire stack once per loop iteration -- instead, charge
+    the slice/update sizes the fusion actually touches."""
+    called = comps.get(calls_name)
+    if called is None:
+        return _op_bytes(comp, op)
+    # pure-elementwise fusions (wrapped converts/broadcasts) are CPU-lowering
+    # artifacts; on TPU they fuse into their consumers -- charge nothing.
+    if all(o.kind in _ELEMENTWISE or o.kind in _SKIP_BYTES
+           for o in called.ops):
+        return 0.0
+    total = 0.0
+    by_name = {o.name: o for o in called.ops}
+
+    def resolve_through_elementwise(o: Optional[Op]) -> Optional[Op]:
+        seen = 0
+        while o is not None and o.kind in _ELEMENTWISE and o.operands \
+                and seen < 8:
+            o = by_name.get(o.operands[0])
+            seen += 1
+        return o
+
+    # result side: DUS-rooted fusions (possibly through converts) update
+    # in place
+    root = called.root()
+    root_ops = [root] if root else []
+    if root and root.kind == "tuple":
+        root_ops = [by_name.get(n) for n in root.operands]
+        root_ops = [o for o in root_ops if o is not None]
+    charged_result = 0.0
+    for ro in root_ops:
+        ro_shape = ro.shape
+        eff = resolve_through_elementwise(ro)
+        if eff is not None and eff.kind == "dynamic-update-slice" \
+                and len(eff.operands) >= 2:
+            charged_result += 2.0 * shape_bytes(
+                called.symbols.get(eff.operands[1], ""))
+        else:
+            charged_result += shape_bytes(ro_shape)
+    total += charged_result if root_ops else shape_bytes(op.shape)
+    # operand side: per fusion parameter, find its transitive non-elementwise
+    # consumers (converts in between are CPU artifacts)
+    def terminal_consumers(name: str, depth=0) -> List[Op]:
+        out = []
+        for o in called.ops:
+            if name in o.operands:
+                if o.kind in _ELEMENTWISE and depth < 8:
+                    out.extend(terminal_consumers(o.name, depth + 1))
+                else:
+                    out.append(o)
+        return out
+
+    for i, oname in enumerate(op.operands):
+        if i >= len(called.param_order):
+            break
+        pname = called.param_order[i]
+        consumers = terminal_consumers(pname)
+        if consumers and all(
+                o.kind in _SLICE_LIKE or
+                (o.kind == "dynamic-update-slice" and
+                 _feeds_target(called, by_name, pname, o))
+                for o in consumers):
+            total += sum(2.0 * shape_bytes(o.shape) for o in consumers
+                         if o.kind in _SLICE_LIKE)
+        else:
+            total += shape_bytes(comp.symbols.get(oname, ""))
+    return total
+
+
+def _feeds_target(called: Comp, by_name: Dict[str, Op], pname: str,
+                  dus: Op) -> bool:
+    """True if pname reaches dus as its in-place TARGET (operand 0),
+    possibly through elementwise ops."""
+    if not dus.operands:
+        return False
+    cur = dus.operands[0]
+    for _ in range(8):
+        if cur == pname:
+            return True
+        o = by_name.get(cur)
+        if o is None or o.kind not in _ELEMENTWISE or not o.operands:
+            return False
+        cur = o.operands[0]
+    return False
+
+
+def _op_bytes(comp: Comp, op: Op) -> float:
+    res = shape_bytes(op.shape)
+    if op.kind == "dynamic-update-slice" and len(op.operands) >= 2:
+        upd = shape_bytes(comp.symbols.get(op.operands[1], ""))
+        return 2.0 * upd                      # in-place: read+write the slice
+    if op.kind in _SLICE_LIKE:
+        return 2.0 * res                      # offset read + write
+    if op.kind == "scatter" and len(op.operands) >= 3:
+        upd = shape_bytes(comp.symbols.get(op.operands[2], ""))
+        return 2.0 * upd + res
+    reads = sum(shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+    return res + reads
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_f32: float = 0.0      # payload bytes moved at f32 width
+    n_dots: int = 0
+    unknown_trip: int = 0
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+    @property
+    def coll_bf16_wire(self) -> float:
+        """Collective bytes assuming f32 payloads travel at bf16 width.
+        XLA-CPU upcasts bf16 dots to f32, so partial-sum all-reduces carry
+        f32 on this runtime; a real TPU reduces the bf16 dot outputs. The
+        roofline reports both (EXPERIMENTS.md notes the bias)."""
+        return self.coll_total - 0.5 * self.coll_f32
+
+
+def analyze_hlo(text: str) -> Costs:
+    comps, entry = parse_module(text)
+    costs = Costs()
+    flops_memo: Dict[str, float] = {}
+
+    def comp_flops(name: str) -> float:
+        """dot flops of a computation incl. fusion-called ones (no loops)."""
+        if name in flops_memo:
+            return flops_memo[name]
+        flops_memo[name] = 0.0  # cycle guard
+        c = comps.get(name)
+        if c is None:
+            return 0.0
+        total = 0.0
+        for op in c.ops:
+            if op.kind == "dot":
+                total += _dot_flops(c, op)
+            mcall = _CALLS_RE.search(op.line) or _TO_APPLY_RE.search(op.line)
+            if mcall and op.kind in ("fusion", "call", "map", "reduce",
+                                     "custom-call"):
+                total += comp_flops(mcall.group(1))
+        flops_memo[name] = total
+        return total
+
+    visited_exec: set = set()
+
+    def walk(name: str, mult: float):
+        c = comps.get(name)
+        if c is None:
+            return
+        for op in c.ops:
+            base_kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if op.kind == "while":
+                mw = _WHILE_RE.search(op.line)
+                mt = _TRIP_RE.search(op.line)
+                trip = float(mt.group(1)) if mt else 1.0
+                if not mt:
+                    costs.unknown_trip += 1
+                if mw:
+                    walk(mw.group(2), mult * trip)   # body
+                    walk(mw.group(1), mult * trip)   # condition
+                continue
+            if op.kind in ("call", "conditional"):
+                for m in re.finditer(r"(?:to_apply|branch_computations=\{)"
+                                     r"%?([\w\.\-]+)", op.line):
+                    walk(m.group(1), mult)
+                continue
+            if base_kind in COLLECTIVES:
+                if op.kind.endswith("-done"):
+                    continue
+                b = shape_bytes(op.shape)
+                factor = 2.0 if base_kind == "all-reduce" else 1.0
+                costs.coll[base_kind] += b * factor * mult
+                if op.shape.lstrip("(").startswith(("f32", "f64")):
+                    costs.coll_f32 += b * factor * mult
+                costs.bytes += _op_bytes(c, op) * mult
+                continue
+            if op.kind == "dot":
+                costs.flops += _dot_flops(c, op) * mult
+                costs.n_dots += 1
+                costs.bytes += _op_bytes(c, op) * mult
+                continue
+            if op.kind == "fusion":
+                mcall = _CALLS_RE.search(op.line)
+                if mcall:
+                    costs.flops += comp_flops(mcall.group(1)) * mult
+                    costs.bytes += _fusion_bytes(comps, c, op,
+                                                 mcall.group(1)) * mult
+                else:
+                    costs.bytes += _op_bytes(c, op) * mult
+                continue
+            if op.kind in _SKIP_BYTES or op.kind in _ELEMENTWISE:
+                continue
+            costs.bytes += _op_bytes(c, op) * mult
+
+    if entry:
+        walk(entry, 1.0)
+    return costs

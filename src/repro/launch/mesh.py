@@ -1,0 +1,35 @@
+"""Production mesh construction (assignment-prescribed shapes).
+
+Kept as functions so importing this module never touches jax device state
+(jax locks the device count at first backend init -- the dry-run must set
+XLA_FLAGS before this runs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(data=16, model=16) single pod; (pod=2, data=16, model=16) for 512."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(shape, axes)
+    except (ValueError, TypeError):
+        # jax.make_mesh requires len(devices) == prod(shape); when the
+        # runtime exposes more placeholder devices than the mesh needs
+        # (single-pod mesh on the 512-device dry-run process), take a slice.
+        n = int(np.prod(shape))
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devs, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests/examples (uses however many devices exist)."""
+    import jax
+
+    n = data * model
+    devs = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))

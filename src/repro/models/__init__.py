@@ -1,0 +1,7 @@
+from .model import Model, build_model, cache_partition_axes
+from .params import (abstract_params, count_params, init_params,
+                     logical_axes, partition_specs, resolve_spec)
+
+__all__ = ["Model", "build_model", "cache_partition_axes", "abstract_params",
+           "count_params", "init_params", "logical_axes", "partition_specs",
+           "resolve_spec"]

@@ -1,0 +1,306 @@
+"""Grouped-query attention with a TP-even head layout, KV caching, and
+memory-bounded (chunked online-softmax) cores for long sequences.
+
+HeadLayout
+----------
+The model axis of the production mesh is 16-way, but the assigned archs have
+q-head counts {16, 25, 32, 36} and kv-head counts {4, 5, 8, 16, 32}. To keep
+head sharding even (no GSPMD padding waste on the big q/o projections and no
+per-token activation collectives), q/o weights are stored in a
+
+    (kv_eff, g_eff, head_dim)  layout, with  kv_eff % tp == 0.
+
+* Each kv_eff slot serves g_eff q slots whose keys/values it holds.
+* kv weights are stored raw (d, n_kv, hd) -- replicated over 'model',
+  sharded over 'data' on the embed dim -- and expanded to kv_eff slots with
+  an in-graph static gather ``wk[:, kv_map, :]``. The gather is a *weight*
+  op (a few MB), not an activation op: each model shard slices locally;
+  gradients of the replicated copies are summed by GSPMD, exactly matching
+  GQA semantics.
+* Surplus slots are dead: zero-init q weights + a hard output mask so
+  gradients cannot resurrect them; math is exactly the published arch.
+* dead-slot compute waste shows up in the roofline MODEL_FLOPS/HLO ratio.
+
+Examples at tp=16: qwen3 (32q,8kv) -> kv_eff=16, g_eff=2, 0 dead.
+starcoder2 (36q,4kv) -> kv_eff=16 (4 kv x 3 copies + 4 dead), g_eff=3,
+12 dead q slots of 48. hymba (25q,5kv) -> kv_eff=16 (5 kv x 3 copies +
+1 dead), g_eff=2, 7 dead of 32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard_hint
+from .layers import apply_rope, rmsnorm, rmsnorm_decl
+from .params import ParamDecl
+
+NEG_INF = -1e9
+CHUNKED_THRESHOLD = 8192   # use chunked online-softmax core above this T
+KV_CHUNK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    n_q: int
+    n_kv: int
+    head_dim: int
+    tp: int
+    kv_eff: int
+    g_eff: int
+    kv_map: Tuple[int, ...]   # len kv_eff; original kv head (dead slots -> 0)
+    q_map: Tuple[int, ...]    # len kv_eff*g_eff; original q head or -1
+    alive: Tuple[int, ...]    # len kv_eff*g_eff; 1 if slot is a real q head
+
+    @property
+    def n_q_eff(self) -> int:
+        return self.kv_eff * self.g_eff
+
+    @property
+    def n_dead(self) -> int:
+        return self.n_q_eff - self.n_q
+
+    def alive_mask(self) -> np.ndarray:
+        return np.asarray(self.alive, np.float32).reshape(
+            self.kv_eff, self.g_eff)
+
+
+def resolve_head_layout(n_q: int, n_kv: int, head_dim: int,
+                        tp: int) -> HeadLayout:
+    assert n_q % n_kv == 0, (n_q, n_kv)
+    group = n_q // n_kv
+    if n_kv >= tp:
+        kv_eff = -(-n_kv // tp) * tp
+        g_eff = group
+        kv_map, q_map = [], []
+        for j in range(kv_eff):
+            kv_map.append(j if j < n_kv else 0)
+            for g in range(g_eff):
+                q_map.append(j * group + g if j < n_kv else -1)
+    else:
+        g_eff = max(1, -(-n_q // tp))
+        # grow g_eff until all (kv, q-chunk) pairs fit in tp slots
+        while n_kv * (-(-group // g_eff)) > tp:
+            g_eff += 1
+        kv_map, q_map = [], []
+        for k in range(n_kv):
+            qs = list(range(k * group, (k + 1) * group))
+            for c in range(0, group, g_eff):
+                kv_map.append(k)
+                chunk = qs[c: c + g_eff]
+                chunk += [-1] * (g_eff - len(chunk))
+                q_map.extend(chunk)
+        while len(kv_map) < tp:
+            kv_map.append(0)
+            q_map.extend([-1] * g_eff)
+        kv_eff = len(kv_map)
+    alive = tuple(1 if q >= 0 else 0 for q in q_map)
+    return HeadLayout(n_q, n_kv, head_dim, tp, kv_eff, g_eff,
+                      tuple(kv_map), tuple(q_map), alive)
+
+
+# ---------------------------------------------------------------------------
+# Param decls
+# ---------------------------------------------------------------------------
+
+def attention_decls(d: int, layout: HeadLayout, qk_norm: bool,
+                    cross: bool = False) -> Dict[str, Any]:
+    hd = layout.head_dim
+    decls = {
+        "wq": ParamDecl((d, layout.kv_eff, layout.g_eff, hd),
+                        ("embed", "kv_heads_eff", "q_group", "head_dim")),
+        "wk": ParamDecl((d, layout.n_kv, hd),
+                        ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((d, layout.n_kv, hd),
+                        ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((layout.kv_eff, layout.g_eff, hd, d),
+                        ("kv_heads_eff", "q_group", "head_dim", "embed")),
+    }
+    if qk_norm:
+        decls["q_norm"] = rmsnorm_decl(hd)
+        decls["k_norm"] = rmsnorm_decl(hd)
+    if cross:
+        decls["gate"] = ParamDecl((1,), (None,), init="zeros")
+    return decls
+
+
+def _expand_kv_weight(w: jax.Array, layout: HeadLayout) -> jax.Array:
+    """(d, n_kv, hd) -> (d, kv_eff, hd). Static gather; each model shard
+    slices its own copies locally (w is replicated over 'model')."""
+    idx = jnp.asarray(layout.kv_map, jnp.int32)
+    return jnp.take(w, idx, axis=1)
+
+
+def project_qkv(p, x: jax.Array, layout: HeadLayout, *,
+                positions: Optional[jax.Array], rope_theta: float,
+                qk_norm: bool, kv_x: Optional[jax.Array] = None):
+    """x: (B,S,d) -> q (B,S,kv_eff,g_eff,hd), k/v (B,T,kv_eff,hd).
+
+    kv_x: source for k/v (cross attention); defaults to x.
+    positions=None skips RoPE (cross attention / encoder option)."""
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(x.dtype))
+    wk = _expand_kv_weight(p["wk"].astype(x.dtype), layout)
+    wv = _expand_kv_weight(p["wv"].astype(x.dtype), layout)
+    k = jnp.einsum("btd,dkh->btkh", src, wk)
+    v = jnp.einsum("btd,dkh->btkh", src, wv)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if positions is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    q = shard_hint(q, "batch", "seq", "kv_heads_eff", "q_group", "head_dim")
+    k = shard_hint(k, "batch", "seq", "kv_heads_eff", "head_dim")
+    v = shard_hint(v, "batch", "seq", "kv_heads_eff", "head_dim")
+    return q, k, v
+
+
+def output_proj(p, ctx: jax.Array, layout: HeadLayout) -> jax.Array:
+    """ctx (B,S,kv_eff,g_eff,hd) -> (B,S,d), dead slots hard-masked."""
+    mask = jnp.asarray(layout.alive_mask(), ctx.dtype)
+    ctx = ctx * mask[None, None, :, :, None]
+    return jnp.einsum("bskgh,kghd->bsd", ctx, p["wo"].astype(ctx.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(S,T) additive bias from absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend_full(q, k, v, q_pos, k_pos, *, causal: bool,
+                window: Optional[int]) -> jax.Array:
+    """Materialized-scores core. q (B,S,K,G,H), k/v (B,T,K,H)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k) / np.sqrt(hd)
+    bias = _mask_bias(q_pos, k_pos, causal, window)
+    probs = jax.nn.softmax(scores.astype(jnp.float32) + bias, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", probs.astype(q.dtype), v)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, *, causal: bool,
+                   window: Optional[int], chunk: int = KV_CHUNK) -> jax.Array:
+    """Online-softmax over KV chunks: O(S*chunk) live memory instead of
+    O(S*T). This is the XLA flash-attention analogue used on the dry-run
+    path; the Pallas kernel (kernels/flash_attention.py) implements the same
+    contraction with explicit VMEM tiling for real TPUs."""
+    B, S, K, G, H = q.shape
+    T = k.shape[1]
+    n_chunks = -(-T // chunk)
+    Tp = n_chunks * chunk
+    pad = Tp - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-10**9)
+    k = k.reshape(B, n_chunks, chunk, K, H).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(B, n_chunks, chunk, K, H).transpose(1, 0, 2, 3, 4)
+    k_pos = k_pos.reshape(n_chunks, chunk)
+    scale = 1.0 / np.sqrt(H)
+
+    def step(carry, inp):
+        acc, m, l = carry                         # (B,S,K,G,H) f32, (B,K,G,S)
+        kc, vc, kp = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", q, kc).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos, kp, causal, window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p.astype(q.dtype), vc)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + \
+            pv.astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, S, K, G, H), jnp.float32)
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(step, (acc0, m0, l0), (k, v, k_pos))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal: bool = True,
+           window: Optional[int] = None) -> jax.Array:
+    if k.shape[1] > CHUNKED_THRESHOLD:
+        return attend_chunked(q, k, v, q_pos, k_pos, causal=causal,
+                              window=window)
+    return attend_full(q, k, v, q_pos, k_pos, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode) -- optionally int8-quantized (per-token-per-head scale):
+# decode is cache-read-bandwidth bound, so halving bytes vs bf16 halves the
+# memory-roofline term (EXPERIMENTS.md §Perf, qwen3 decode_32k).
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array):
+    """(B,T,K,H) -> (int8 codes, f32 scale (B,T,K,1)); symmetric."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    s = jnp.maximum(s / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_kv(q: jax.Array, s: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+def cache_decl_shapes(batch: int, max_len: int, layout: HeadLayout,
+                      window: Optional[int]):
+    """Shape/axes for one layer's KV cache. Window layers use a ring buffer
+    of the window size; global layers hold the full context."""
+    T = min(max_len, window) if window else max_len
+    shape = (batch, T, layout.kv_eff, layout.head_dim)
+    axes = ("batch", "kv_seq", "kv_heads_eff", "head_dim")
+    return shape, axes
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, pos: jax.Array,
+                 window: Optional[int]):
+    """Insert one step's k/v at absolute position ``pos`` (ring for SWA)."""
+    T = cache_k.shape[1]
+    idx = (pos % T) if window else pos
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, idx, 0, 0))
+    return ck, cv
+
+
+def cache_positions(pos: jax.Array, T: int, window: Optional[int]):
+    """Absolute positions of each cache slot given current write pos."""
+    slots = jnp.arange(T)
+    if not window:
+        # slot i holds absolute position i; unwritten slots masked by > pos
+        return jnp.where(slots <= pos, slots, -10**9)
+    # ring: slot i holds the largest p <= pos with p % T == i
+    cur = pos % T
+    p = pos - ((cur - slots) % T)
+    return jnp.where(p >= 0, p, -10**9)
+
+
+def attend_decode(q, cache_k, cache_v, pos: jax.Array,
+                  window: Optional[int]) -> jax.Array:
+    """q (B,1,K,G,H) against the cache (B,T,K,H); pos = current abs pos."""
+    T = cache_k.shape[1]
+    k_pos = cache_positions(pos, T, window)
+    q_pos = pos[None] if pos.ndim == 0 else pos
+    return attend_full(q, cache_k, cache_v, jnp.atleast_1d(q_pos), k_pos,
+                       causal=True, window=window)

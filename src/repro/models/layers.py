@@ -1,0 +1,143 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings, losses.
+
+Dtype policy: parameters are held in ``param_dtype`` (fp32 master for
+training, bf16 for serving); activations run in ``compute_dtype`` (bf16);
+softmax/norm statistics accumulate in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_hint
+from .params import ParamDecl
+
+VOCAB_ALIGN = 256  # pad vocab to a multiple of (data*model) so the embedding
+                   # shards evenly on both mesh axes; padded logits are masked.
+
+
+def pad_vocab(v: int, align: int = VOCAB_ALIGN) -> int:
+    return -(-v // align) * align
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    def cast(self, x):
+        return jax.tree.map(lambda a: a.astype(self.compute_dtype), x)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decl(d: int) -> ParamDecl:
+    return ParamDecl((d,), (None,), init="ones")
+
+
+def rmsnorm(scale, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, ..., head_dim) with positions (B, S) broadcastable to the
+    leading batch/seq dims. We require layout (B, S, *heads, head_dim)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,hd/2)
+    # broadcast over any interior head axes
+    extra = x.ndim - angles.ndim - 0
+    shape = angles.shape[:2] + (1,) * (x.ndim - 3) + angles.shape[-1:]
+    angles = angles.reshape(shape)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def mlp_decls(d: int, d_ff: int, kind: str):
+    if kind == "swiglu":
+        return {
+            "wi_gate": ParamDecl((d, d_ff), ("embed", "mlp")),
+            "wi_up": ParamDecl((d, d_ff), ("embed", "mlp")),
+            "wo": ParamDecl((d_ff, d), ("mlp", "embed")),
+        }
+    return {  # gelu
+        "wi": ParamDecl((d, d_ff), ("embed", "mlp")),
+        "wo": ParamDecl((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "swiglu":
+        g = x @ p["wi_gate"].astype(x.dtype)
+        u = x @ p["wi_up"].astype(x.dtype)
+        return (jax.nn.silu(g) * u) @ p["wo"].astype(x.dtype)
+    return jax.nn.gelu(x @ p["wi"].astype(x.dtype),
+                       approximate=True) @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (padded vocab)
+# ---------------------------------------------------------------------------
+
+def embed_decls(vocab: int, d: int, tie: bool):
+    vp = pad_vocab(vocab)
+    decls = {"embedding": ParamDecl((vp, d), ("vocab", "embed"),
+                                    init="embed")}
+    if not tie:
+        decls["unembed"] = ParamDecl((d, vp), ("embed", "vocab"))
+    return decls
+
+
+def embed_lookup(p, tokens: jax.Array, compute_dtype) -> jax.Array:
+    x = jnp.take(p["embedding"].astype(compute_dtype), tokens, axis=0)
+    return shard_hint(x, "batch", "seq", "embed_act")
+
+
+def logits_fn(p, x: jax.Array, vocab: int, tie: bool) -> jax.Array:
+    """(B,S,d) -> (B,S,vocab_padded) fp32 logits with padded slots masked."""
+    if tie:
+        w = p["embedding"].astype(x.dtype).T
+    else:
+        w = p["unembed"].astype(x.dtype)
+    logits = (x @ w).astype(jnp.float32)
+    logits = shard_hint(logits, "batch", "seq", "vocab_act")
+    vp = logits.shape[-1]
+    if vp != vocab:
+        mask = jnp.arange(vp) < vocab
+        logits = jnp.where(mask, logits, -1e9)
+    return logits
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy in fp32. labels: (B,S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,412 @@
+"""build_model(cfg, tp): the single entry point used by the trainer, the
+serving engine, smoke tests and the dry-run.
+
+A Model bundles:
+  decls          -- parameter declarations (shapes + logical axes)
+  loss           -- (params, batch) -> scalar   [train]
+  prefill        -- (params, batch) -> (last_logits, cache)
+  decode_step    -- (params, cache, tokens, pos, [memory_cacheable]) ->
+                    (logits, cache)
+  cache_decls    -- (batch, max_len) -> pytree of (shape, axes, dtype)
+  input_specs    -- ShapeConfig -> kwargs pytree of ShapeDtypeStruct
+                    (the dry-run stand-ins; no allocation)
+
+Family routing: dense / moe / ssm / hybrid share the decoder-only path;
+audio = enc-dec with a stubbed frame-embedding frontend; vlm = decoder with
+interleaved gated cross-attention groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import attention as attn
+from . import ssm as ssm_mod
+from .layers import (embed_lookup, logits_fn, pad_vocab, rmsnorm,
+                     rmsnorm_decl, softmax_xent)
+from .params import Decls, ParamDecl, count_params
+from .transformer import (_stack_decls, block_apply, block_decls,
+                          decoder_decls, run_decoder, segments)
+
+from .transformer import CACHE_DTYPE  # noqa: F401 (single source)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    tp: int
+    decls: Decls
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_decls: Callable
+    input_specs: Callable
+
+    @property
+    def n_params(self) -> int:
+        return count_params(self.decls)
+
+
+# ---------------------------------------------------------------------------
+# Cache declaration mirrors (must match block_apply cache structure exactly)
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg, tp, batch, max_len, window, kv_quant=False):
+    layout = attn.resolve_head_layout(cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, tp)
+    shape, axes = attn.cache_decl_shapes(batch, max_len, layout, window)
+    if kv_quant:
+        sshape = shape[:-1] + (1,)
+        entry = {"q": (shape, axes, jnp.int8),
+                 "s": (sshape, axes, jnp.float32)}
+        return {"k": entry, "v": dict(entry)}
+    return {"k": (shape, axes, CACHE_DTYPE), "v": (shape, axes, CACHE_DTYPE)}
+
+
+def _ssm_cache(cfg, tp, batch):
+    lo = ssm_mod.resolve_ssm_layout(cfg.d_model, cfg.ssm, tp)
+    shapes = ssm_mod.ssm_cache_shapes(batch, lo)
+    out = {}
+    for k, (shape, axes) in shapes.items():
+        dt = jnp.float32 if k == "state" else CACHE_DTYPE
+        out[k] = (shape, axes, dt)
+    return out
+
+
+def _block_cache(cfg, tp, batch, max_len, window, *, cross_len=None,
+                 kv_quant=False):
+    entry: Dict[str, Any] = {}
+    if cfg.n_heads:
+        entry["attn"] = _attn_cache(cfg, tp, batch, max_len, window,
+                                    kv_quant)
+    if cfg.ssm is not None:
+        entry["ssm"] = _ssm_cache(cfg, tp, batch)
+    if cross_len is not None:
+        layout = attn.resolve_head_layout(cfg.n_heads, cfg.n_kv_heads,
+                                          cfg.resolved_head_dim, tp)
+        shape = (batch, cross_len, layout.kv_eff, layout.head_dim)
+        axes = ("batch", "frontend_seq", "kv_heads_eff", "head_dim")
+        entry["cross"] = {"k": (shape, axes, CACHE_DTYPE),
+                          "v": (shape, axes, CACHE_DTYPE)}
+    return entry
+
+
+def _stack_cache(entry, n):
+    def f(leaf):
+        shape, axes, dt = leaf
+        return ((n,) + shape, ("layers",) + axes, dt)
+    return jax.tree.map(f, entry, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 3 and isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only family
+# ---------------------------------------------------------------------------
+
+def _positions(B, S):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def _build_decoder_only(cfg: ArchConfig, tp: int, remat: str,
+                        kv_quant: bool = False) -> Model:
+    decls = decoder_decls(cfg, tp)
+
+    def loss(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        x, _, aux = run_decoder(cfg, tp, params, x, mode="train",
+                                positions=_positions(B, S),
+                                remat_policy=remat)
+        x = rmsnorm(params["ln_f"], x)
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return softmax_xent(logits, labels) + aux
+
+    def prefill(params, batch, max_len=None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        x, caches, _ = run_decoder(cfg, tp, params, x, mode="prefill",
+                                   positions=_positions(B, S),
+                                   max_len=max_len, kv_quant=kv_quant,
+                                   remat_policy=remat)
+        x = rmsnorm(params["ln_f"], x[:, -1:])
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return logits, caches
+
+    def decode_step(params, cache, tokens, pos):
+        B = tokens.shape[0]
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, caches, _ = run_decoder(cfg, tp, params, x, mode="decode",
+                                   positions=positions, caches=cache,
+                                   pos=pos, kv_quant=kv_quant)
+        x = rmsnorm(params["ln_f"], x)
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return logits, caches
+
+    def cache_decls(batch, max_len):
+        out = {}
+        for seg in segments(cfg):
+            entry = _block_cache(cfg, tp, batch, max_len, seg.window,
+                                 kv_quant=kv_quant)
+            out[seg.name] = _stack_cache(entry, seg.n_layers) \
+                if seg.scanned else entry
+        return out
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            return {"batch": {"tokens": tok, "labels": tok}}
+        if shape.kind == "prefill":
+            return {"batch": {"tokens": tok}}
+        cache = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l[0], l[2]),
+            cache_decls(B, S), is_leaf=_is_cache_leaf)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return Model(cfg, tp, decls, loss, prefill, decode_step, cache_decls,
+                 input_specs)
+
+
+def _is_cache_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# Enc-dec family (seamless: audio frontend stub -> encoder -> decoder)
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg: ArchConfig, tp: int, remat: str) -> Model:
+    d = cfg.d_model
+    enc_block = block_decls(cfg, tp)
+    dec_block = block_decls(cfg, tp, cross=True)
+    decls: Decls = dict(decoder_decls(cfg, tp))  # embed + layers + ln_f
+    decls["layers"] = _stack_decls(dec_block, cfg.n_layers)
+    decls["frontend_proj"] = ParamDecl((d, d), ("embed", None))
+    decls["encoder"] = _stack_decls(enc_block, cfg.n_encoder_layers)
+    decls["ln_enc"] = rmsnorm_decl(d)
+
+    def encode(params, frames):
+        B, S, _ = frames.shape
+        x = frames.astype(CACHE_DTYPE) @ params["frontend_proj"].astype(
+            CACHE_DTYPE)
+        positions = _positions(B, S)
+
+        def body(carry, p_l):
+            h, = carry
+            h, _, _ = block_apply(cfg, tp, p_l, h, mode="train", window=None,
+                                  positions=positions, causal=False)
+            return (h,), None
+
+        (x,), _ = jax.lax.scan(jax.checkpoint(body), (x,), params["encoder"])
+        return rmsnorm(params["ln_enc"], x)
+
+    def loss(params, batch):
+        enc_out = encode(params, batch["frames"])
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        x, _, aux = run_decoder(cfg, tp, params, x, mode="train",
+                                positions=_positions(B, S), memory=enc_out,
+                                remat_policy=remat)
+        x = rmsnorm(params["ln_f"], x)
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return softmax_xent(logits, labels) + aux
+
+    def prefill(params, batch, max_len=None):
+        enc_out = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        x, caches, _ = run_decoder(cfg, tp, params, x, mode="prefill",
+                                   positions=_positions(B, S),
+                                   memory=enc_out, max_len=max_len,
+                                   remat_policy=remat)
+        x = rmsnorm(params["ln_f"], x[:, -1:])
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return logits, caches
+
+    def decode_step(params, cache, tokens, pos):
+        B = tokens.shape[0]
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, caches, _ = run_decoder(cfg, tp, params, x, mode="decode",
+                                   positions=positions, caches=cache,
+                                   pos=pos)
+        x = rmsnorm(params["ln_f"], x)
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return logits, caches
+
+    def cache_decls(batch, max_len, enc_len=None):
+        entry = _block_cache(cfg, tp, batch, max_len, None,
+                             cross_len=enc_len or max_len)
+        return {"layers": _stack_cache(entry, cfg.n_layers)}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        frames = jax.ShapeDtypeStruct((B, S, d), jnp.bfloat16)
+        if shape.kind == "train":
+            return {"batch": {"frames": frames, "tokens": tok,
+                              "labels": tok}}
+        if shape.kind == "prefill":
+            return {"batch": {"frames": frames, "tokens": tok}}
+        cache = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l[0], l[2]),
+            cache_decls(B, S), is_leaf=_is_cache_leaf)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return Model(cfg, tp, decls, loss, prefill, decode_step, cache_decls,
+                 input_specs)
+
+
+# ---------------------------------------------------------------------------
+# VLM family (groups of self layers + one gated cross-attn layer)
+# ---------------------------------------------------------------------------
+
+def _build_vlm(cfg: ArchConfig, tp: int, remat: str) -> Model:
+    every = cfg.cross_attn_every
+    n_groups = cfg.n_layers // every
+    n_self = every - 1
+    self_block = block_decls(cfg, tp)
+    cross_block = block_decls(cfg, tp, cross=True)
+    # cross layers replace self-attention (Llama-3.2 style image layers)
+    cross_block = {k: v for k, v in cross_block.items()
+                   if k not in ("ln1", "attn")}
+    decls: Decls = dict(decoder_decls(cfg, tp))
+    del decls["layers"]
+    decls["groups_self"] = _stack_decls(_stack_decls(self_block, n_self),
+                                        n_groups)
+    decls["groups_cross"] = _stack_decls(cross_block, n_groups)
+
+    def _run(params, x, *, mode, positions, caches=None, pos=None,
+             memory=None, max_len=None):
+        caches = caches or {}
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def group_body(carry, xs):
+            h, aux_acc = carry
+            p_self, p_cross, c_self, c_cross = xs
+
+            def inner(c2, xs2):
+                hh, aa = c2
+                p_l, c_l = xs2
+                hh, c_out, aux = block_apply(cfg, tp, p_l, hh, mode=mode,
+                                             window=None,
+                                             positions=positions,
+                                             cache=c_l, pos=pos,
+                                             max_len=max_len)
+                return (hh, aa + aux), c_out
+
+            (h, aux_acc), c_self_out = jax.lax.scan(
+                inner, (h, aux_acc), (p_self, c_self))
+            h, c_cross_out, aux = block_apply(cfg, tp, p_cross, h, mode=mode,
+                                              window=None,
+                                              positions=positions,
+                                              cache=c_cross, pos=pos,
+                                              memory=memory, max_len=max_len)
+            return (h, aux_acc + aux), (c_self_out, c_cross_out)
+
+        xs = (params["groups_self"], params["groups_cross"],
+              caches.get("groups_self"), caches.get("groups_cross"))
+        if mode == "train":
+            body = jax.checkpoint(
+                lambda c, x_: (group_body(c, x_)[0], None))
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), xs)
+            return x, None, aux
+        (x, aux), (c_self, c_cross) = jax.lax.scan(group_body, (x, aux0), xs)
+        return x, {"groups_self": c_self, "groups_cross": c_cross}, aux
+
+    def loss(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        x, _, aux = _run(params, x, mode="train", positions=_positions(B, S),
+                         memory=batch["image_embeds"])
+        x = rmsnorm(params["ln_f"], x)
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return softmax_xent(logits, labels) + aux
+
+    def prefill(params, batch, max_len=None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        x, caches, _ = _run(params, x, mode="prefill",
+                            positions=_positions(B, S),
+                            memory=batch["image_embeds"], max_len=max_len)
+        x = rmsnorm(params["ln_f"], x[:, -1:])
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return logits, caches
+
+    def decode_step(params, cache, tokens, pos):
+        B = tokens.shape[0]
+        x = embed_lookup(params, tokens, CACHE_DTYPE)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, caches, _ = _run(params, x, mode="decode", positions=positions,
+                            caches=cache, pos=pos)
+        x = rmsnorm(params["ln_f"], x)
+        logits = logits_fn(params, x, cfg.vocab_size, cfg.tie_embeddings)
+        return logits, caches
+
+    def cache_decls(batch, max_len):
+        self_entry = _block_cache(cfg, tp, batch, max_len, None)
+        cross_entry = _block_cache(
+            dataclasses.replace(cfg, ssm=None), tp, batch, max_len, None,
+            cross_len=cfg.n_frontend_tokens)
+        cross_entry = {"cross": cross_entry["cross"]}
+        return {
+            "groups_self": _stack_cache(_stack_cache(self_entry, n_self),
+                                        n_groups),
+            "groups_cross": _stack_cache(cross_entry, n_groups),
+        }
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        img = jax.ShapeDtypeStruct((B, cfg.n_frontend_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+        if shape.kind == "train":
+            return {"batch": {"tokens": tok, "labels": tok,
+                              "image_embeds": img}}
+        if shape.kind == "prefill":
+            return {"batch": {"tokens": tok, "image_embeds": img}}
+        cache = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l[0], l[2]),
+            cache_decls(B, S), is_leaf=_is_cache_leaf)
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return Model(cfg, tp, decls, loss, prefill, decode_step, cache_decls,
+                 input_specs)
+
+
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ArchConfig, tp: int = 1, remat: str = "minimal",
+                kv_quant: bool = False) -> Model:
+    """kv_quant: int8 KV cache (decoder-only families; the §Perf serving
+    optimization -- decode is cache-bandwidth bound)."""
+    if cfg.family == "audio":
+        return _build_encdec(cfg, tp, remat)
+    if cfg.family == "vlm":
+        return _build_vlm(cfg, tp, remat)
+    return _build_decoder_only(cfg, tp, remat, kv_quant=kv_quant)
+
+
+def cache_partition_axes(model: Model, batch: int, max_len: int):
+    """Logical axes tree for the cache (dry-run in_shardings)."""
+    return jax.tree.map(lambda l: l[1], model.cache_decls(batch, max_len),
+                        is_leaf=_is_cache_leaf)

@@ -1,0 +1,284 @@
+"""Mamba2 SSD (state-space duality) mixer.
+
+Train/prefill use the chunked block-matmul dual form (MXU-friendly: the
+inner loops are (L x L) and (N x P) matmuls per chunk); decode uses the O(1)
+recurrent form with a conv ring buffer + (H, N, P) state.
+
+TP layout: SSD heads are padded to a multiple of the model axis
+(24 -> 32 at tp=16) with dead heads zero-init and hard-masked, mirroring
+attention's HeadLayout policy. B/C projections are per-group (G=1 for the
+assigned archs) and replicated over 'model'.
+
+Numerics: all decay terms are exp of non-positive cumulative sums (A < 0),
+so nothing overflows; accumulation is fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import SSMConfig
+from ..distributed.sharding import shard_hint
+from .layers import rmsnorm_decl
+from .params import ParamDecl
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMLayout:
+    n_heads: int      # real heads = d_inner // head_dim
+    h_eff: int        # padded to multiple of tp
+    head_dim: int     # P
+    d_state: int      # N
+    n_groups: int     # G (1 for assigned archs)
+    d_conv: int
+
+    def alive_mask(self) -> np.ndarray:
+        m = np.zeros(self.h_eff, np.float32)
+        m[: self.n_heads] = 1
+        return m
+
+
+def resolve_ssm_layout(d_model: int, ssm: SSMConfig, tp: int) -> SSMLayout:
+    d_inner = ssm.expand * d_model
+    h = d_inner // ssm.head_dim
+    h_eff = -(-h // tp) * tp
+    return SSMLayout(h, h_eff, ssm.head_dim, ssm.d_state, 1, ssm.d_conv)
+
+
+def ssm_decls(d: int, lo: SSMLayout) -> Dict[str, Any]:
+    H, P, N, G, K = lo.h_eff, lo.head_dim, lo.d_state, lo.n_groups, lo.d_conv
+    return {
+        "wz": ParamDecl((d, H, P), ("embed", "ssm_heads", "head_dim")),
+        "wx": ParamDecl((d, H, P), ("embed", "ssm_heads", "head_dim")),
+        "wB": ParamDecl((d, G, N), ("embed", None, "ssm_state")),
+        "wC": ParamDecl((d, G, N), ("embed", None, "ssm_state")),
+        "wdt": ParamDecl((d, H), ("embed", "ssm_heads")),
+        "dt_bias": ParamDecl((H,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamDecl((H,), ("ssm_heads",), init="ones"),
+        "D": ParamDecl((H,), ("ssm_heads",), init="ones"),
+        "conv_x": ParamDecl((K, H, P), ("conv", "ssm_heads", "head_dim")),
+        "conv_B": ParamDecl((K, G, N), ("conv", None, "ssm_state")),
+        "conv_C": ParamDecl((K, G, N), ("conv", None, "ssm_state")),
+        "norm": ParamDecl((H, P), ("ssm_heads", "head_dim"), init="ones"),
+        "wo": ParamDecl((H, P, d), ("ssm_heads", "head_dim", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along axis 1. x (B,S,...), w (K, ...)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(K - 1):
+        shift = K - 1 - i
+        xi = jnp.pad(x, [(0, 0), (shift, 0)] + [(0, 0)] * (x.ndim - 2)
+                     )[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return out
+
+
+def _conv_step(state: jax.Array, x_new: jax.Array, w: jax.Array):
+    """Decode-time conv: state (B,K,...) ring holding the last K inputs."""
+    state = jnp.concatenate([state[:, 1:], x_new[:, None]], axis=1)
+    out = jnp.einsum("bk...,k...->b...", state, w)
+    return state, out
+
+
+def _project(p, u: jax.Array, lo: SSMLayout):
+    """u (B,S,d) -> z,x (B,S,H,P), B,C (B,S,G,N), dt (B,S,H) (pre-conv)."""
+    dt = u @ p["wdt"].astype(u.dtype)
+    z = jnp.einsum("bsd,dhp->bshp", u, p["wz"].astype(u.dtype))
+    x = jnp.einsum("bsd,dhp->bshp", u, p["wx"].astype(u.dtype))
+    Bm = jnp.einsum("bsd,dgn->bsgn", u, p["wB"].astype(u.dtype))
+    Cm = jnp.einsum("bsd,dgn->bsgn", u, p["wC"].astype(u.dtype))
+    return z, x, Bm, Cm, dt
+
+
+def _finish(p, y: jax.Array, x: jax.Array, z: jax.Array,
+            lo: SSMLayout) -> jax.Array:
+    """y,x,z (B,S,H,P) -> (B,S,d): +Dx, gated RMSNorm, dead-head mask, out."""
+    y = y + p["D"].astype(y.dtype)[:, None] * x
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6)).astype(y.dtype) * \
+        p["norm"].astype(y.dtype)
+    mask = jnp.asarray(lo.alive_mask(), y.dtype)
+    y = y * mask[:, None]
+    return jnp.einsum("bshp,hpd->bsd", y, p["wo"].astype(y.dtype))
+
+
+def _head_groups(lo: SSMLayout) -> jax.Array:
+    """Real head h -> group h*G//n_heads; dead heads -> group 0."""
+    g = np.zeros(lo.h_eff, np.int32)
+    for h in range(lo.n_heads):
+        g[h] = h * lo.n_groups // lo.n_heads
+    return jnp.asarray(g)
+
+
+def ssd_apply(p, u: jax.Array, lo: SSMLayout, chunk: int,
+              initial_state: Optional[jax.Array] = None,
+              return_state: bool = False):
+    """Chunked SSD over a full sequence. u (B,S,d) -> (B,S,d).
+
+    S is padded internally to a multiple of ``chunk``; padded positions get
+    dt=0 (identity decay, zero input) so the returned final state is exactly
+    the state after the S real tokens."""
+    B, S0, d = u.shape
+    L = chunk
+    S = -(-S0 // L) * L
+    if S != S0:
+        u = jnp.pad(u, ((0, 0), (0, S - S0), (0, 0)))
+    nc = S // L
+    z, x, Bm, Cm, dt = _project(p, u, lo)
+    x = _causal_conv(x, p["conv_x"].astype(x.dtype))
+    Bm = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype))
+    Cm = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype))
+    x, Bm, Cm = (jax.nn.silu(t.astype(jnp.float32)).astype(t.dtype)
+                 for t in (x, Bm, Cm))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))      # (B,S,H)
+    if S != S0:
+        valid = (jnp.arange(S) < S0)[None, :, None]
+        dt = dt * valid
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,) < 0
+    dA = dt * A                                                  # <= 0
+
+    gidx = _head_groups(lo)
+    # chunked views
+    c = lambda t: t.reshape((B, nc, L) + t.shape[2:])
+    xc, Bc, Cc, dtc, dAc = c(x), c(Bm), c(Cm), c(dt), c(dA)
+    cum = jnp.cumsum(dAc, axis=2)                                # (B,nc,L,H)
+
+    # ---- intra-chunk (dual / quadratic-within-chunk form) ----
+    # The (L x L) per-head decay matrix is the big intermediate; pin its
+    # head dim to the model axis or GSPMD replicates it (measured: 34GB/dev
+    # on mamba2 train_4k before this hint; see EXPERIMENTS.md §Perf).
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc)                # (B,nc,G,L,L)
+    CBh = CB[:, :, gidx]                                         # (B,nc,H,L,L)
+    CBh = shard_hint(CBh, "batch", None, "ssm_heads", None, None)
+    cumh = cum.transpose(0, 1, 3, 2)                             # (B,nc,H,L)
+    seg = cumh[..., :, None] - cumh[..., None, :]                # cum_i-cum_j
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: seg is positive above the diagonal and exp overflows
+    # there; exp(inf)*0 => NaN in the backward (d(exp)=exp). exp(-inf)=0
+    # has a clean zero gradient.
+    seg = jnp.where(tri, seg, -jnp.inf)
+    M = jnp.exp(seg) * \
+        CBh.astype(jnp.float32) * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    M = shard_hint(M, "batch", None, "ssm_heads", None, None)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", M.astype(u.dtype), xc)
+
+    # ---- chunk states ----
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                   # (B,nc,L,H)
+    Bh = Bc[:, :, :, gidx]                                       # (B,nc,L,H,N)
+    Bh = shard_hint(Bh, "batch", None, None, "ssm_heads", "ssm_state")
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp",
+                        w.astype(u.dtype), Bh, xc)               # (B,nc,H,N,P)
+    states = shard_hint(states, "batch", None, "ssm_heads", "ssm_state",
+                        "head_dim")
+
+    # ---- inter-chunk recurrence over nc ----
+    decay = jnp.exp(cum[:, :, -1, :])                            # (B,nc,H)
+
+    def step(s_prev, inp):
+        dcy, st = inp                                            # (B,H),(B,H,N,P)
+        s = s_prev * dcy[..., None, None].astype(s_prev.dtype) + \
+            st.astype(s_prev.dtype)
+        return s, s_prev
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, lo.h_eff, lo.d_state, lo.head_dim), jnp.float32))
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (decay.transpose(1, 0, 2),
+                   states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                   # (B,nc,H,N,P)
+
+    Ch = Cc[:, :, :, gidx]                                       # (B,nc,L,H,N)
+    Ch = shard_hint(Ch, "batch", None, None, "ssm_heads", "ssm_state")
+    y_inter = jnp.einsum("bclhn,bchnp,bclh->bclhp", Ch,
+                         s_prevs.astype(u.dtype),
+                         jnp.exp(cum).astype(u.dtype))
+    y = (y_intra + y_inter).reshape(B, S, lo.h_eff, lo.head_dim)
+    out = _finish(p, y, x, z, lo)
+    if S != S0:
+        out = out[:, :S0]
+    if return_state:
+        return out, s_final
+    return out
+
+
+def ssd_reference(p, u: jax.Array, lo: SSMLayout):
+    """Sequential (per-token recurrent) oracle for tests."""
+    B, S, d = u.shape
+    z, x, Bm, Cm, dt = _project(p, u, lo)
+    x = _causal_conv(x, p["conv_x"].astype(x.dtype))
+    Bm = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype))
+    Cm = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype))
+    x, Bm, Cm = (jax.nn.silu(t.astype(jnp.float32)).astype(t.dtype)
+                 for t in (x, Bm, Cm))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    gidx = _head_groups(lo)
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp                      # (B,H,P),(B,G,N)x2,(B,H)
+        da = jnp.exp(dtt * A)                      # (B,H)
+        bh, ch = bt[:, gidx], ct[:, gidx]          # (B,H,N)
+        s = s * da[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dtt, bh.astype(jnp.float32),
+            xt.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), s)
+        return s, y
+
+    s0 = jnp.zeros((B, lo.h_eff, lo.d_state, lo.head_dim), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (x.transpose(1, 0, 2, 3),
+                                    Bm.transpose(1, 0, 2, 3),
+                                    Cm.transpose(1, 0, 2, 3),
+                                    dt.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3).astype(u.dtype)   # (B,S,H,P)
+    return _finish(p, y, x, z, lo)
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+def ssm_cache_shapes(batch: int, lo: SSMLayout):
+    H, P, N, G, K = lo.h_eff, lo.head_dim, lo.d_state, lo.n_groups, lo.d_conv
+    return {
+        "state": ((batch, H, N, P),
+                  ("batch", "ssm_heads", "ssm_state", "head_dim")),
+        "conv_x": ((batch, K, H, P),
+                   ("batch", "conv", "ssm_heads", "head_dim")),
+        "conv_B": ((batch, K, G, N), ("batch", "conv", None, "ssm_state")),
+        "conv_C": ((batch, K, G, N), ("batch", "conv", None, "ssm_state")),
+    }
+
+
+def ssm_decode_step(p, cache: Dict[str, jax.Array], u: jax.Array,
+                    lo: SSMLayout):
+    """u (B,1,d) one token -> (out (B,1,d), new cache)."""
+    z, x, Bm, Cm, dt = _project(p, u, lo)
+    sq = lambda t: t[:, 0]
+    cx, xo = _conv_step(cache["conv_x"], sq(x), p["conv_x"].astype(x.dtype))
+    cb, bo = _conv_step(cache["conv_B"], sq(Bm), p["conv_B"].astype(x.dtype))
+    cc, co = _conv_step(cache["conv_C"], sq(Cm), p["conv_C"].astype(x.dtype))
+    xo, bo, co = (jax.nn.silu(t.astype(jnp.float32)).astype(t.dtype)
+                  for t in (xo, bo, co))
+
+    dtt = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    gidx = _head_groups(lo)
+    da = jnp.exp(dtt * A)                                        # (B,H)
+    bh, ch = bo[:, gidx], co[:, gidx]                            # (B,H,N)
+    s = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtt, bh.astype(jnp.float32),
+        xo.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), s)
+    out = _finish(p, y[:, None].astype(u.dtype), xo[:, None], z, lo)
+    return out, {"state": s, "conv_x": cx, "conv_B": cb, "conv_C": cc}

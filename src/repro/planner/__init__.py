@@ -1,0 +1,7 @@
+from .cost import CostEstimate, join_distribution, scan_cost, selectivity
+from .designer import DesignReport, design
+from .planner import PhysicalPlan, candidate_projections, plan_query
+
+__all__ = ["CostEstimate", "DesignReport", "PhysicalPlan",
+           "candidate_projections", "design", "join_distribution",
+           "plan_query", "scan_cost", "selectivity"]

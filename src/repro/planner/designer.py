@@ -1,0 +1,136 @@
+"""The Database Designer (paper §6.3): automatic physical design.
+
+Two sequential phases, as published:
+  1. Query optimization -- enumerate candidate projections from workload
+     heuristics (predicate columns, group-by columns, aggregate columns,
+     join keys), invoke the real optimizer/cost model per query with each
+     candidate available, and keep the projections the optimizer actually
+     picks.
+  2. Storage optimization -- choose encodings *empirically*: encode a data
+     sample with every legal scheme and keep the smallest (this is
+     encodings.encode(AUTO); the DBD records the choice per column).
+
+Design policies trade query speed against storage/load cost by capping how
+many non-super projections are proposed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.database import VerticaDB
+from ..core.encodings import Encoding, encode
+from ..core.projection import ProjectionDef, SegmentationSpec
+from ..core.types import SQLType
+from ..engine.pipeline import Query
+from . import cost as cost_mod
+
+POLICIES = {"load-optimized": 0, "balanced": 2, "query-optimized": 4}
+
+
+@dataclasses.dataclass
+class DesignReport:
+    proposed: List[ProjectionDef]
+    encoding_choices: Dict[str, Dict[str, str]]
+    per_query: List[Tuple[str, float, float]]   # (desc, before_s, after_s)
+
+
+def _candidates_for_query(db: VerticaDB, q: Query) -> List[ProjectionDef]:
+    """Heuristic candidate enumeration (paper phase 1)."""
+    table = db.catalog.tables[q.table].schema
+    need = sorted(q.needed_columns() & set(table.column_names()))
+    cands = []
+    sort_firsts = []
+    if q.predicate is not None:
+        sort_firsts += sorted(q.predicate.bounds())
+    if q.group_by:
+        sort_firsts.append(q.group_by)
+    if q.join:
+        sort_firsts.append(q.join.fact_key)
+    seen = set()
+    for first in sort_firsts:
+        if first in seen or first not in need:
+            continue
+        seen.add(first)
+        rest = [c for c in need if c != first]
+        seg_cols = (q.join.fact_key,) if q.join else \
+            (first if not q.group_by else q.group_by,)
+        cands.append(ProjectionDef(
+            name=f"{q.table}_dbd_{first}",
+            anchor=q.table, columns=tuple([first] + rest),
+            sort_order=(first,) + tuple(rest[:1]),
+            segmentation=SegmentationSpec("hash", tuple(
+                c for c in seg_cols if c in need) or (first,))))
+    return cands
+
+
+def design(db: VerticaDB, workload: Sequence[Query], *,
+           policy: str = "balanced",
+           deploy: bool = False) -> DesignReport:
+    from .planner import plan_query
+
+    budget = POLICIES[policy]
+    # baseline costs with the current design
+    before = []
+    for q in workload:
+        plan = plan_query(db, q)
+        before.append(plan.estimated.total if plan.estimated else 0.0)
+
+    # phase 1: propose, deploy tentatively, re-plan, keep what gets used
+    proposals: Dict[str, ProjectionDef] = {}
+    for q in workload:
+        for cand in _candidates_for_query(db, q):
+            if cand.name not in proposals \
+                    and cand.name not in db.catalog.projections:
+                proposals[cand.name] = cand
+    chosen: List[ProjectionDef] = []
+    per_query = []
+    if proposals and budget > 0:
+        for cand in list(proposals.values()):
+            db.create_projection(cand, populate=True)
+        for q, b in zip(workload, before):
+            plan = plan_query(db, q)
+            a = plan.estimated.total if plan.estimated else 0.0
+            per_query.append((repr(q.table) + "/" +
+                              (q.group_by or "scan"), b, a))
+            picked = db.catalog.projections.get(plan.projection)
+            if picked is not None and picked.name in proposals and \
+                    picked not in chosen:
+                chosen.append(picked)
+        chosen = chosen[:budget]
+        # tear down unused proposals (and everything if not deploying)
+        for cand in list(proposals.values()):
+            keep = deploy and cand in chosen
+            if not keep:
+                _drop_projection(db, cand.name)
+                _drop_projection(db, cand.name + "_b1")
+    else:
+        for q, b in zip(workload, before):
+            per_query.append((repr(q.table), b, b))
+
+    # phase 2: empirical encoding choice on a sample (AUTO == the
+    # experiment; we record what it picked)
+    enc_report: Dict[str, Dict[str, str]] = {}
+    for proj in ([p for p in chosen] if deploy else
+                 list(db.catalog.projections.values())):
+        choice = {}
+        rows = db.read_projection(proj.name) if deploy else \
+            db.read_table(proj.anchor)
+        for c in proj.columns:
+            if c not in rows or len(rows[c]) == 0:
+                continue
+            sample = rows[c][:100_000]
+            enc = encode(np.asarray(sample), SQLType.INT)
+            choice[c] = enc.encoding.value
+        enc_report[proj.name] = choice
+    return DesignReport(chosen, enc_report, per_query)
+
+
+def _drop_projection(db: VerticaDB, name: str):
+    if name not in db.catalog.projections:
+        return
+    del db.catalog.projections[name]
+    for node in db.nodes:
+        node.stores.pop(name, None)

@@ -1,0 +1,179 @@
+"""The query planner (paper §6.2, a compact V2Opt).
+
+Physical-property driven: for each candidate projection we check
+  * column coverage (can it answer the query at all),
+  * sort-order match against predicate / group-by columns (pruning and
+    pipelined aggregation),
+  * segmentation vs join keys (co-located vs broadcast vs resegment),
+then cost the survivors with the compression-aware model and keep the
+cheapest. GroupBy algorithm choice (dense-hash / sort / RLE-direct) is part
+of the physical plan; SIP filters are planned whenever a selective dim
+predicate exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.database import VerticaDB
+from ..core.encodings import Encoding
+from ..engine.pipeline import Query
+from . import cost as cost_mod
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    projection: str
+    sources: List[Tuple[int, str]]          # (host node, projection) pairs
+    groupby_algorithm: str = "sort"
+    scalar_rle: bool = False           # COUNT on RLE runs, zero decode
+    join_strategy: str = ""
+    use_sip: bool = False
+    dense_domain_limit: int = 1 << 20
+    max_groups: int = 1 << 16
+    estimated: Optional[cost_mod.CostEstimate] = None
+    explain: List[str] = dataclasses.field(default_factory=list)
+
+
+def _fact_columns(q: Query) -> set:
+    """Columns the fact-side projection must supply (join output columns
+    come from the dimension build side, not the scan)."""
+    need = q.needed_columns()
+    if q.join is not None:
+        need -= set(q.join.dim_columns) | {q.join.dim_key}
+    return need
+
+
+def candidate_projections(db: VerticaDB, q: Query):
+    need = _fact_columns(q)
+    out = []
+    for p in db.catalog.projections_of(q.table):
+        if p.buddy_of is not None:
+            continue
+        if need <= set(p.columns):
+            out.append(p)
+    return out
+
+
+def plan_query(db: VerticaDB, q: Query) -> PhysicalPlan:
+    cands = candidate_projections(db, q)
+    if not cands:
+        raise ValueError(f"no projection covers {sorted(_fact_columns(q))}")
+    need = _fact_columns(q)
+    best = None
+    for p in cands:
+        est = cost_mod.scan_cost(db, p, q.predicate, need)
+        bonus = 1.0
+        # sort-order match: leading sort column in the predicate => pruning
+        # actually bites; on the group-by key => pipelined aggregation
+        bounds = q.predicate.bounds() if q.predicate is not None else {}
+        if p.sort_order and p.sort_order[0] in bounds:
+            bonus *= 0.5
+        if q.group_by and p.sort_order and p.sort_order[0] == q.group_by:
+            bonus *= 0.8
+        score = est.total * bonus
+        if best is None or score < best[0]:
+            best = (score, p, est)
+    _, proj, est = best
+
+    plan = PhysicalPlan(projection=proj.name, sources=[], estimated=est)
+    plan.explain.append(
+        f"projection {proj.name} (sort {proj.sort_order}, "
+        f"~{est.bytes_scanned/1e6:.2f}MB scanned, est {est.total*1e3:.3f}ms)")
+
+    # source routing (buddy failover; one host may serve two segments)
+    if proj.segmentation.replicated:
+        first_up = next(n.id for n in db.nodes if n.up)
+        plan.sources = [(first_up, proj.name)]
+    else:
+        owners = db.segment_owners(proj)
+        for seg_node, owner_proj in owners.items():
+            host = seg_node
+            if owner_proj != proj.name:
+                host = (seg_node + db.catalog.projections[
+                    owner_proj].segmentation.offset) % db.catalog.n_nodes
+            if (host, owner_proj) not in plan.sources:
+                plan.sources.append((host, owner_proj))
+
+    # join strategy + SIP
+    if q.join is not None:
+        dim_rows = len(db.read_table(q.join.dim_table)[q.join.dim_key])
+        strat, net_s = cost_mod.join_distribution(
+            db, proj, q.join.fact_key, q.join.dim_table, dim_rows,
+            dim_key=q.join.dim_key)
+        plan.join_strategy = strat
+        est.net_s += net_s
+        # SIP only pays when the build side actually filters (the paper's
+        # predictability lesson: drop special cases that sometimes lose);
+        # without a dim predicate every fact row joins and the filter is
+        # pure overhead.
+        plan.use_sip = q.join.dim_predicate is not None
+        plan.explain.append(f"join {strat}, SIP={plan.use_sip}")
+
+    # scalar COUNT with an EXACT integer interval on the RLE sort leader:
+    # run-level math only (bounds() is pruning-conservative; counting needs
+    # exact_int_interval -- see engine/expr.py)
+    if q.group_by is None and q.aggs and q.join is None \
+            and all(a[2] == "count" for a in q.aggs):
+        from ..engine.expr import exact_int_interval
+        leader = proj.sort_order[0] if proj.sort_order else None
+        iv = exact_int_interval(q.predicate) \
+            if q.predicate is not None else (leader, None, None)
+        if iv is not None and iv[0] == leader \
+                and _is_rle_sorted(db, proj, leader):
+            plan.scalar_rle = True
+            plan.explain.append("scalar COUNT on RLE runs (no decode)")
+
+    # groupby algorithm: dense for small domains (dict-encoded /
+    # low-cardinality), else sort-based; RLE-direct noted when available
+    if q.group_by is not None:
+        if q.join is not None and q.group_by in q.join.dim_columns:
+            # grouping on a dimension attribute: its domain comes from the
+            # dim projection's SMAs (the fact side never stores it)
+            dom = _domain_estimate(
+                db, db.catalog.super_of(q.join.dim_table), q.group_by)
+        else:
+            dom = _domain_estimate(db, proj, q.group_by)
+        if dom is not None and 0 <= dom <= plan.dense_domain_limit:
+            plan.groupby_algorithm = "dense"
+        else:
+            plan.groupby_algorithm = "sort"
+        if _is_rle_sorted(db, proj, q.group_by) and not q.predicate \
+                and q.join is None and all(a[2] == "count" for a in q.aggs):
+            plan.groupby_algorithm = "rle"
+        plan.explain.append(
+            f"groupby {plan.groupby_algorithm} (domain~{dom})")
+    return plan
+
+
+def _domain_estimate(db: VerticaDB, proj, col: str) -> Optional[int]:
+    lo = hi = None
+    for node in db.nodes:
+        if not node.up:
+            continue
+        for c in node.stores[proj.name].containers:
+            if col not in c.smas or c.n_rows == 0:
+                continue
+            cmin, cmax = int(c.smas[col].container_min()), \
+                int(c.smas[col].container_max())
+            lo = cmin if lo is None else min(lo, cmin)
+            hi = cmax if hi is None else max(hi, cmax)
+    if lo is None:
+        return None
+    if lo < 0:
+        return None
+    return hi + 1
+
+
+def _is_rle_sorted(db: VerticaDB, proj, col: str) -> bool:
+    if not proj.sort_order or proj.sort_order[0] != col:
+        return False
+    for node in db.nodes:
+        if not node.up:
+            continue
+        for c in node.stores[proj.name].containers:
+            if c.columns[col].encoding != Encoding.RLE:
+                return False
+    return True

@@ -1,0 +1,7 @@
+from .optim import OptState, adamw_update, init_opt_state, lr_schedule
+from .train_step import (abstract_train_state, init_train_state,
+                         make_train_step, train_state_axes)
+
+__all__ = ["OptState", "adamw_update", "init_opt_state", "lr_schedule",
+           "abstract_train_state", "init_train_state", "make_train_step",
+           "train_state_axes"]

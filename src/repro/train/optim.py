@@ -1,0 +1,73 @@
+"""AdamW + cosine schedule + global-norm clipping, in plain jax.
+
+Optimizer moments inherit the parameter sharding (params are already 2-D
+sharded 'data' x 'model' on their embed/head dims, so m/v are ZeRO-sharded
+for free -- see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RunConfig
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return OptState(zeros, jax.tree.map(lambda p: jnp.zeros_like(p), params),
+                    jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(rc: RunConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(rc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - rc.warmup_steps) /
+                 jnp.maximum(rc.total_steps - rc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return rc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(rc: RunConfig, params, grads,
+                 opt: OptState) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+    step = opt.step + 1
+    lr = lr_schedule(rc, step)
+    b1, b2 = rc.beta1, rc.beta2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + rc.eps) + rc.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_m, new_v, step), \
+        {"lr": lr, "grad_norm": gnorm}

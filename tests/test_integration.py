@@ -1,0 +1,123 @@
+"""End-to-end system behaviour: the paper's lifecycle (load -> query while
+loading -> mergeout -> failure -> recovery) and the training integration
+(columnar corpus -> train -> checkpoint -> failure -> bit-identical
+resume)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
+from repro.core.recovery import recover_node
+from repro.configs.base import ArchConfig, RunConfig
+from repro.data import TokenStore, token_corpus
+from repro.engine import Query, col, execute
+from repro.models import build_model
+from repro.train.checkpoint import (CheckpointStore, shard_state,
+                                    unshard_state)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_ingest_query_fail_recover_lifecycle():
+    rng = np.random.default_rng(0)
+    db = VerticaDB(n_nodes=4, k_safety=1, block_rows=128)
+    db.create_table(TableSchema("m", (
+        ColumnDef("metric"), ColumnDef("meter"), ColumnDef("ts"),
+        ColumnDef("value", SQLType.FLOAT))),
+        sort_order=("metric", "meter", "ts"), segment_by=("meter",))
+
+    total = 0
+    for wave in range(3):
+        t = db.begin()
+        n = 1500
+        db.insert(t, "m", {
+            "metric": rng.integers(0, 10, n),
+            "meter": rng.integers(0, 50, n),
+            "ts": np.sort(rng.integers(0, 10**6, n)),
+            "value": rng.normal(size=n)})
+        db.commit(t)
+        total += n
+        # query WHILE loading (parallel load: I locks; reads: no locks)
+        out, _ = execute(db, Query("m", group_by="metric",
+                                   aggs=(("c", "metric", "count"),)))
+        assert out["c"].sum() == total
+        db.run_tuple_mover(force_moveout=True)
+
+    out0, _ = execute(db, Query(
+        "m", predicate=col("metric") == 3,
+        aggs=(("c", "metric", "count"), ("s", "value", "sum"))))
+    db.fail_node(1)
+    out1, _ = execute(db, Query(
+        "m", predicate=col("metric") == 3,
+        aggs=(("c", "metric", "count"), ("s", "value", "sum"))))
+    assert out0["c"][0] == out1["c"][0]
+    assert abs(out0["s"][0] - out1["s"][0]) < 1e-2
+    recover_node(db, 1)
+    out2, _ = execute(db, Query(
+        "m", predicate=col("metric") == 3,
+        aggs=(("c", "metric", "count"),)))
+    assert out2["c"][0] == out0["c"][0]
+
+
+def test_train_checkpoint_resume_bit_identical(tmp_path):
+    cfg = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                     head_dim=16)
+    model = build_model(cfg, tp=1)
+    rc = RunConfig(total_steps=20, warmup_steps=2)
+    step = jax.jit(make_train_step(model, rc))
+
+    store = TokenStore.create(n_nodes=2, block_rows=256)
+    epoch = store.ingest(token_corpus(32, 65, cfg.vocab_size, seed=0))
+    batches = list(store.batches(4, 32, as_of=epoch, seed=0))[:10]
+    batches = [{k: jnp.asarray(v) for k, v in b.items()} for b in batches]
+
+    # run A: straight through
+    state = init_train_state(model, jax.random.key(0))
+    for b in batches:
+        state, _ = step(state, b)
+    final_a = jax.tree.map(np.asarray, state)
+
+    # run B: checkpoint at 5, "crash", restore (via buddy), replay 5..10
+    state = init_train_state(model, jax.random.key(0))
+    ck = CheckpointStore(tmp_path, n_shards=2)
+    for i, b in enumerate(batches[:5]):
+        state, _ = step(state, b)
+    np_state = jax.tree.map(np.asarray, state)
+    for s in range(2):
+        ck.save_shard(5, s, shard_state(np_state, s, 2))
+    ck.commit_epoch(5)
+    del state
+    shards = [ck.restore_shard(5, s, shard_state(np_state, s, 2),
+                               lost_nodes=(0,)) for s in range(2)]
+    state = jax.tree.map(jnp.asarray, unshard_state(shards, np_state))
+    for b in batches[5:]:
+        state, _ = step(state, b)
+    final_b = jax.tree.map(np.asarray, state)
+
+    for a, b in zip(jax.tree.leaves(final_a), jax.tree.leaves(final_b)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dbd_designs_help_query_cost():
+    rng = np.random.default_rng(5)
+    db = VerticaDB(n_nodes=2, k_safety=0, block_rows=128)
+    db.create_table(TableSchema("f", (
+        ColumnDef("a"), ColumnDef("b"), ColumnDef("v", SQLType.FLOAT))),
+        sort_order=("a",), segment_by=("a",))
+    t = db.begin(direct_to_ros=True)
+    n = 20_000
+    db.insert(t, "f", {"a": rng.integers(0, 1000, n),
+                       "b": np.sort(rng.integers(0, 100, n)),
+                       "v": rng.normal(size=n)})
+    db.commit(t)
+    from repro.planner import design, plan_query
+    q = Query("f", predicate=col("b") == 7, aggs=(("c", "b", "count"),))
+    before = plan_query(db, q).estimated.bytes_scanned
+    rep = design(db, [q], policy="query-optimized", deploy=True)
+    after = plan_query(db, q).estimated.bytes_scanned
+    assert rep.proposed, "DBD should propose a b-sorted projection"
+    assert after <= before
+    out, _ = execute(db, q)
+    rows = db.read_table("f")
+    assert out["c"][0] == (rows["b"] == 7).sum()

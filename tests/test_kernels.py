@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret on CPU) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("nb,R", [(1, 128), (4, 128), (3, 384), (8, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_rle_filter_agg(nb, R, dtype):
+    rv = jnp.asarray(RNG.integers(0, 100, (nb, R)), dtype)
+    rl = jnp.asarray(RNG.integers(0, 20, (nb, R)), dtype)
+    got = ops.rle_filter_agg(rv, rl, lo=25.0, hi=75.0)
+    pad = (-R) % 128
+    rvp = jnp.pad(rv, ((0, 0), (0, pad)))
+    rlp = jnp.pad(rl, ((0, 0), (0, pad)))
+    want = ref.rle_filter_agg_ref(rvp, rlp, 25.0, 75.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("nb,B,domain", [(1, 128, 16), (4, 256, 64),
+                                         (2, 512, 128), (3, 128, 1000)])
+def test_onehot_groupby(nb, B, domain):
+    k = jnp.asarray(RNG.integers(0, domain, (nb, B)), jnp.int32)
+    v = jnp.asarray(RNG.normal(size=(nb, B)), jnp.float32)
+    got = ops.onehot_groupby(k, v, domain=domain)
+    want = ref.onehot_groupby_ref(k, v, domain)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nb,B", [(1, 128), (5, 256), (2, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_delta_decode(nb, B, dtype):
+    first = jnp.asarray(RNG.integers(0, 1000, (nb, 1)), dtype)
+    deltas = jnp.asarray(RNG.integers(-5, 6, (nb, B)), dtype)
+    got = ops.delta_decode(first, deltas)
+    want = ref.delta_decode_ref(first, deltas)
+    np.testing.assert_allclose(got, want)
+
+
+@pytest.mark.parametrize("nb,B,S", [(1, 128, 100), (3, 256, 128),
+                                    (2, 512, 1000)])
+def test_semijoin_probe(nb, B, S):
+    keys = jnp.asarray(RNG.integers(0, 2000, (nb, B)), jnp.int32)
+    build = jnp.asarray(RNG.choice(2000, S, replace=False), jnp.int32)
+    got = ops.semijoin_probe(keys, build)
+    pad = (-S) % 128
+    want = ref.semijoin_probe_ref(
+        keys, jnp.pad(build, (0, pad), constant_values=-1))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("S,T,d", [(128, 128, 64), (256, 256, 128),
+                                   (128, 384, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(S, T, d, causal, dtype):
+    if causal and S != T:
+        pytest.skip("causal requires square here")
+    q = jnp.asarray(RNG.normal(size=(S, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(T, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(T, d)), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_batched():
+    q = jnp.asarray(RNG.normal(size=(2, 3, 128, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 3, 128, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 3, 128, 64)), jnp.float32)
+    got = ops.flash_attention(q, k, v)
+    want = ops.flash_attention(q, k, v, force_ref=True)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,98 @@
+"""The §Perf optimizations must preserve semantics: expert-local MoE ==
+scatter MoE; int8 KV decode stays consistent; FLOAT_SCALED round-trips."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core.encodings import Encoding, encode
+from repro.core.types import SQLType
+from repro.distributed.sharding import activation_hints, rules_for
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model, init_params
+from repro.models.moe import moe_apply, moe_decls
+from repro.models.params import init_params as raw_init
+
+
+def test_expert_local_matches_scatter():
+    cfg = configs.get("olmoe-1b-7b").reduced()
+    d = cfg.d_model
+    p = raw_init(moe_decls(d, cfg.moe), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, d), jnp.float32)
+    o1, a1 = moe_apply(p, x, cfg.moe)
+    moe_el = dataclasses.replace(cfg.moe, dispatch="a2a")
+    mesh = make_host_mesh(1, 1)
+    with activation_hints(rules_for(cfg, "train"), mesh):
+        o2, a2 = moe_apply(p, x, moe_el)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_expert_local_grads_match():
+    cfg = configs.get("olmoe-1b-7b").reduced()
+    d = cfg.d_model
+    p = raw_init(moe_decls(d, cfg.moe), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 8, d), jnp.float32)
+
+    def loss_scatter(p):
+        return moe_apply(p, x, cfg.moe)[0].sum()
+
+    moe_el = dataclasses.replace(cfg.moe, dispatch="a2a")
+    mesh = make_host_mesh(1, 1)
+
+    def loss_el(p):
+        with activation_hints(rules_for(cfg, "train"), mesh):
+            return moe_apply(p, x, moe_el)[0].sum()
+
+    g1 = jax.grad(loss_scatter)(p)
+    g2 = jax.grad(loss_el)(p)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "hymba-1.5b"])
+def test_kv_quant_decode_consistent(arch):
+    cfg = configs.get(arch).reduced()
+    m = build_model(cfg, tp=2, kv_quant=True)
+    params = init_params(m.decls, jax.random.key(0))
+    rng = np.random.default_rng(3)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 33)), jnp.int32)
+    _, cache = m.prefill(params, {"tokens": tok[:, :32]}, max_len=36)
+    ld, _ = m.decode_step(params, cache, tok[:, 32:],
+                          jnp.asarray(32, jnp.int32))
+    lf, _ = m.prefill(params, {"tokens": tok})
+    assert float(jnp.abs(ld - lf).max()) < 0.6  # int8 quantization noise
+
+
+def test_kv_quant_cache_decls_are_int8():
+    cfg = configs.get("qwen3-4b").reduced()
+    m = build_model(cfg, tp=2, kv_quant=True)
+    decls = m.cache_decls(2, 64)
+    leaf = decls["layers"]["attn"]["k"]
+    assert leaf["q"][2] == jnp.int8
+    assert leaf["s"][0][-1] == 1  # one scale per (token, head)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=300),
+       st.integers(0, 3))
+def test_float_scaled_roundtrip(data, k):
+    v = np.round(np.asarray(data, np.float64), k)
+    col = encode(v, SQLType.FLOAT, Encoding.AUTO, block_rows=64)
+    np.testing.assert_array_equal(col.decode(), v)
+    if col.encoding == Encoding.FLOAT_SCALED:
+        assert col.inner is not None
+
+
+def test_float_scaled_compresses_quantized():
+    rng = np.random.default_rng(0)
+    v = np.round(rng.normal(100, 1, 50_000), 2)
+    col = encode(v, SQLType.FLOAT, Encoding.AUTO, block_rows=4096)
+    plain = encode(v, SQLType.FLOAT, Encoding.PLAIN, block_rows=4096)
+    assert col.packed_bytes < 0.5 * plain.packed_bytes

@@ -1,0 +1,95 @@
+"""Unit tests for the dry-run analysis stack: loop-aware HLO costs,
+spec resolution, MODEL_FLOPS sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES_BY_NAME
+from repro.distributed.sharding import BASE_RULES, resolve_spec
+from repro.launch.hlo_cost import analyze_hlo, shape_bytes
+from repro.launch.roofline_math import model_flops
+
+MESH_AXES = ("data", "model")
+
+
+def test_resolve_spec_basics():
+    from jax.sharding import PartitionSpec as P
+    assert resolve_spec(("batch", "seq"), BASE_RULES, MESH_AXES) == \
+        P("data")
+    assert resolve_spec(("embed", "mlp"), BASE_RULES, MESH_AXES) == \
+        P("data", "model")
+    # pod dropped on the single-pod mesh
+    assert resolve_spec(("batch",), BASE_RULES,
+                        ("pod", "data", "model")) == P(("pod", "data"))
+    # duplicate mesh axis: later dim loses
+    rules = dict(BASE_RULES, seq="data")
+    assert resolve_spec(("batch", "seq"), rules, MESH_AXES) == P("data")
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert shape_bytes("(s32[], bf16[16,8]{1,0})") == 4 + 16 * 8 * 2
+    assert shape_bytes("pred[100]") == 100
+
+
+def test_hlo_cost_multiplies_loop_trips():
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def body(c, _):
+        return c @ c, None
+
+    one = jax.jit(lambda x: x @ x).lower(a).compile()
+    loop = jax.jit(lambda x: jax.lax.scan(body, x, None,
+                                          length=7)[0]).lower(a).compile()
+    c1 = analyze_hlo(one.as_text())
+    c7 = analyze_hlo(loop.as_text())
+    assert abs(c7.flops - 7 * c1.flops) < 0.01 * c7.flops
+    # and xla's own cost_analysis does NOT (the reason hlo_cost exists)
+    assert loop.cost_analysis()["flops"] < 2 * c1.flops
+
+
+def test_hlo_cost_nested_loops():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def inner(c, _):
+        return c @ c, None
+
+    def outer(c, _):
+        return jax.lax.scan(inner, c, None, length=3)[0], None
+
+    f = jax.jit(lambda x: jax.lax.scan(outer, x, None, length=5)[0])
+    costs = analyze_hlo(f.lower(a).compile().as_text())
+    expect = 15 * 2 * 64**3
+    assert abs(costs.flops - expect) < 0.05 * expect
+
+
+def test_model_flops_dense_close_to_6nd():
+    cfg = configs.get("granite-3-8b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    mf = model_flops(cfg, shape)
+    # 6 * N * D with N ~ 8B params, D = 4096*256 tokens
+    n_params = cfg.n_layers * (
+        cfg.d_model * (cfg.n_heads + cfg.n_kv_heads) *
+        cfg.resolved_head_dim * 2 + 3 * cfg.d_model * cfg.d_ff) \
+        + 2 * cfg.vocab_size * cfg.d_model
+    six_nd = 6 * n_params * shape.seq_len * shape.global_batch
+    assert 0.7 < mf / six_nd < 1.3
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_model_flops_ordering(shape):
+    cfg = configs.get("qwen3-4b")
+    mf = model_flops(cfg, SHAPES_BY_NAME[shape])
+    assert mf > 0
+    if shape == "decode_32k":
+        assert mf < model_flops(cfg, SHAPES_BY_NAME["prefill_32k"])
+
+
+def test_subquadratic_skip_policy():
+    for name in configs.ARCH_NAMES:
+        cfg = configs.get(name)
+        ok, reason = cfg.supports_shape(SHAPES_BY_NAME["long_500k"])
+        assert ok == cfg.subquadratic
+        assert ok == (cfg.family in ("ssm", "hybrid"))

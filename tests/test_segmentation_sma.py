@@ -1,0 +1,67 @@
+"""Segmentation is a deterministic partition; buddies never collide; SMA
+pruning never drops a matching row."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segmentation import (SegmentationSpec, hash_columns,
+                                     rebalance_plan)
+from repro.core.sma import ColumnSMA
+
+vals = st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=300)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals, st.integers(2, 16))
+def test_placement_partition(data, n_nodes):
+    v = {"k": np.asarray(data, np.int64)}
+    seg = SegmentationSpec("hash", ("k",))
+    nodes, segs = seg.place(v, n_nodes)
+    assert nodes.shape == (len(data),)
+    assert ((nodes >= 0) & (nodes < n_nodes)).all()
+    assert ((segs >= 0) & (segs < seg.n_local_segments)).all()
+    # deterministic
+    n2, s2 = seg.place(v, n_nodes)
+    np.testing.assert_array_equal(nodes, n2)
+    np.testing.assert_array_equal(segs, s2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals, st.integers(2, 16))
+def test_buddy_never_same_node(data, n_nodes):
+    v = {"k": np.asarray(data, np.int64)}
+    seg = SegmentationSpec("hash", ("k",))
+    buddy = SegmentationSpec("hash", ("k",), offset=1)
+    n1, _ = seg.place(v, n_nodes)
+    n2, _ = buddy.place(v, n_nodes)
+    assert (n1 != n2).all()  # K-safety: no row on the same node twice
+
+
+def test_even_distribution():
+    v = {"k": np.arange(100_000, dtype=np.int64)}
+    seg = SegmentationSpec("hash", ("k",))
+    nodes, _ = seg.place(v, 8)
+    counts = np.bincount(nodes, minlength=8)
+    assert counts.min() > 0.8 * counts.mean()
+    assert counts.max() < 1.2 * counts.mean()
+
+
+def test_rebalance_plan_whole_segments_only():
+    moves = rebalance_plan(4, 6, 3)
+    assert all(0 <= old < 4 and 0 <= seg < 3 and 0 <= new < 6
+               for old, seg, new in moves)
+    assert len(moves) > 0
+    assert len(set(moves)) == len(moves)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals, st.integers(-2**40, 2**40), st.integers(-2**40, 2**40))
+def test_sma_pruning_no_false_drops(data, a, b):
+    lo, hi = min(a, b), max(a, b)
+    v = np.asarray(data, np.int64)
+    sma = ColumnSMA.build(v, block_rows=32)
+    keep = sma.prune_blocks(lo, hi)
+    for i in range(keep.shape[0]):
+        blk = v[i * 32:(i + 1) * 32]
+        has_match = ((blk >= lo) & (blk <= hi)).any()
+        if has_match:
+            assert keep[i], "pruned a block containing matches"

@@ -1,0 +1,120 @@
+"""Tuple mover invariants: moveout/mergeout preserve the visible multiset,
+respect partition/segment boundaries, elide AHM-dead rows, and bound the
+number of merges via exponential strata."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ColumnDef, SQLType, TableSchema, VerticaDB)
+from repro.core.tuple_mover import plan_mergeout, stratum_of
+
+
+def _tuples(rows):
+    cols = sorted(rows)
+    return sorted(zip(*[np.asarray(rows[c]).tolist() for c in cols]))
+
+
+def test_moveout_mergeout_preserve_visible_rows(sales_db):
+    db, data = sales_db
+    before = _tuples(db.read_table("sales"))
+    # several more commits to create many small containers, then merge
+    rng = np.random.default_rng(1)
+    for i in range(4):
+        t = db.begin()
+        db.insert(t, "sales", {
+            "sale_id": np.arange(5000 + i * 100, 5100 + i * 100),
+            "cid": rng.integers(0, 20, 100),
+            "date": rng.integers(0, 3000, 100),
+            "price": np.round(rng.normal(100, 10, 100), 2)})
+        db.commit(t)
+        db.run_tuple_mover(force_moveout=True)
+    after = _tuples(db.read_table("sales"))
+    assert len(after) == len(before) + 400
+    assert _tuples(db.read_table("sales", as_of=1)) == before
+
+
+def test_mergeout_respects_partition_and_segment(sales_db):
+    db, _ = sales_db
+    db.run_tuple_mover(force_moveout=True)
+    for node in db.nodes:
+        for store in node.stores.values():
+            if not store.proj.is_super or store.proj.buddy_of:
+                continue
+            for c in store.containers:
+                # every container holds exactly one partition key
+                if c.partition_key is not None and c.n_rows:
+                    dates = c.decode_column("date")
+                    assert (dates // 1000 == c.partition_key).all()
+
+
+def test_ahm_elision():
+    db = VerticaDB(n_nodes=2, k_safety=0, block_rows=32)
+    db.create_table(TableSchema("t", (ColumnDef("k"), ColumnDef("v"))),
+                    sort_order=("k",), segment_by=("k",))
+    # two loads so every (partition, segment) group has >= 2 containers
+    # and a mergeout actually rewrites them
+    for lo in (0, 200):
+        t = db.begin()
+        db.insert(t, "t", {"k": np.arange(lo, lo + 200),
+                           "v": np.arange(lo, lo + 200)})
+        db.commit(t)
+        db.run_tuple_mover(force_moveout=True)
+    t = db.begin()
+    db.delete(t, "t", lambda r: r["k"] < 50)
+    del_epoch = db.commit(t)
+    # historical row count before AHM advances
+    assert len(db.read_table("t", as_of=del_epoch - 1)["k"]) == 400
+    db.epochs.advance_ahm(to_epoch=del_epoch)
+    before_phys = sum(c.n_rows for node in db.nodes
+                      for c in node.stores["t_super"].containers)
+    # a third load makes every group mergeable again; the tuple mover's
+    # rewrite elides the AHM-dead rows
+    t = db.begin()
+    db.insert(t, "t", {"k": np.arange(400, 600),
+                       "v": np.arange(400, 600)})
+    db.commit(t)
+    stats = db.run_tuple_mover(force_moveout=True)
+    assert stats["mergeouts"] > 0
+    after_phys = sum(c.n_rows for node in db.nodes
+                     for c in node.stores["t_super"].containers)
+    assert after_phys < before_phys + 200    # elision reclaimed rows
+    for node in db.nodes:
+        store = node.stores["t_super"]
+        for c in store.containers:
+            de = store.delete_epochs_of(c)
+            # merged containers carry no AHM-dead rows
+            assert not ((de > 0) & (de <= db.epochs.ahm)).any()
+    assert len(db.read_table("t")["k"]) == 550
+
+
+def test_strata_merge_bound():
+    """Merging >=2 same-stratum containers must land >= one stratum up,
+    so each tuple is remerged O(log N) times."""
+    db = VerticaDB(n_nodes=1, k_safety=0, block_rows=32)
+    db.create_table(TableSchema("t", (ColumnDef("k"),)),
+                    sort_order=("k",), segment_by=())
+    rng = np.random.default_rng(0)
+    merges = 0
+    for i in range(16):
+        t = db.begin()
+        db.insert(t, "t", {"k": rng.integers(0, 10**6, 512)})
+        db.commit(t)
+        stats = db.run_tuple_mover(force_moveout=True)
+        merges += stats["mergeouts"]
+    n_total = 16 * 512
+    # log2(16 loads) merges per tuple max; generous upper bound on ops
+    assert merges <= 16 * math.ceil(math.log2(16) + 1)
+    store = db.nodes[0].stores["t_super"]
+    assert sum(c.n_rows for c in store.containers) == n_total
+
+
+def test_drop_partition_is_instant_bulk_delete(sales_db):
+    db, data = sales_db
+    db.run_tuple_mover(force_moveout=True)
+    n_before = len(db.read_table("sales")["date"])
+    in_p0 = int((data["date"] // 1000 == 0).sum())
+    db.drop_partition("sales", 0)
+    rows = db.read_table("sales")
+    assert len(rows["date"]) == n_before - in_p0
+    assert (rows["date"] // 1000 != 0).all()
