@@ -94,6 +94,41 @@ def run(report):
           f"{bytes_plain/bytes_rle:.0f}x")
     report("encoded_exec/ablation", result)
 
+    # --- grouped variant (Q2/Q3 shape): per-key COUNT/SUM on runs vs on
+    # decoded rows -- the grouped twin of kernels/rle_scan_agg.py ---
+    @jax.jit
+    def grouped_rle(rv, rl):
+        k = jnp.clip(rv.astype(jnp.int32), 0, CARD - 1)
+        m = (rl > 0).astype(jnp.float32)
+        cnt = jnp.zeros(CARD, jnp.float32).at[k.reshape(-1)].add(
+            (rl * m).reshape(-1))
+        s = jnp.zeros(CARD, jnp.float32).at[k.reshape(-1)].add(
+            (rv * rl * m).reshape(-1))
+        return cnt, s
+
+    @jax.jit
+    def grouped_plain(flat):
+        k = jnp.clip(flat.astype(jnp.int32), 0, CARD - 1)
+        cnt = jnp.zeros(CARD, jnp.float32).at[k].add(1.0)
+        s = jnp.zeros(CARD, jnp.float32).at[k].add(flat)
+        return cnt, s
+
+    tg_rle = _time(lambda: grouped_rle(rv, rl))
+    tg_plain = _time(lambda: grouped_plain(plain))
+    gc1, gs1 = grouped_rle(rv, rl)
+    gc2, gs2 = grouped_plain(plain)
+    # tail-block padding repeats the last value: counted on the runs side
+    # only (the engine subtracts it per container; see pipeline._rle_groupby)
+    pad = colenc.n_blocks * colenc.block_rows - N
+    assert abs(float(gc1.sum()) - float(gc2.sum()) - pad) < 1
+    grouped = {
+        "ms": {"rle_grouped": tg_rle * 1e3, "plain_grouped": tg_plain * 1e3},
+        "speedup_vs_plain": tg_plain / tg_rle,
+    }
+    print(f"[encoded_exec] grouped: rle {tg_rle*1e3:.2f}ms | plain "
+          f"{tg_plain*1e3:.2f}ms -> {tg_plain/tg_rle:.0f}x")
+    report("encoded_exec/grouped", grouped)
+
 
 if __name__ == "__main__":
     run(lambda k, v: None)

@@ -7,15 +7,22 @@
   distribution      -> §3.6/§6.2 join locality decisions + Send/Recv
   roofline          -> §Roofline reader over results/dryrun/
 
-Writes results/bench/<name>.json and prints a summary per benchmark.
-Usage: PYTHONPATH=src python -m benchmarks.run [name ...]
+Writes results/bench/results.json and prints a summary per benchmark.
+After a cstore_queries run, also writes repo-root BENCH_cstore.json (the
+headline perf numbers: cold/warm totals, speedups, disk ratio) so the
+perf trajectory is tracked PR-over-PR.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [name ...]
+  --quick: CI-smoke sizes (small N_FACT) via REPRO_BENCH_QUICK=1
 """
 import json
+import os
 import pathlib
 import sys
 import time
 
-OUT = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "results" / "bench"
 
 
 def main() -> None:
@@ -29,7 +36,15 @@ def main() -> None:
         "distribution": distribution,
         "roofline": roofline,
     }
-    names = sys.argv[1:] or list(mods)
+    args = sys.argv[1:]
+    if "--quick" in args:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+        args = [a for a in args if a != "--quick"]
+    names = args or list(mods)
+    unknown = [n for n in names if n not in mods]
+    if unknown:
+        sys.exit(f"[run] unknown benchmark(s) {unknown}; "
+                 f"available: {', '.join(mods)}")
     OUT.mkdir(parents=True, exist_ok=True)
     results = {}
     prev = OUT / "results.json"
@@ -48,6 +63,15 @@ def main() -> None:
     (OUT / "results.json").write_text(json.dumps(results, indent=1,
                                                  default=str))
     print(f"[run] wrote {OUT/'results.json'}")
+    t3 = results.get("cstore_queries/table3")
+    if t3 is not None and "cstore_queries" in names:
+        bench = {k: t3.get(k) for k in (
+            "n_fact", "quick", "total_vertica_s", "total_baseline_s",
+            "total_speedup", "total_cold_s", "total_warm_s",
+            "warm_speedup_vs_cold", "disk_ratio")}
+        (ROOT / "BENCH_cstore.json").write_text(
+            json.dumps(bench, indent=1) + "\n")
+        print(f"[run] wrote {ROOT/'BENCH_cstore.json'}")
 
 
 if __name__ == '__main__':

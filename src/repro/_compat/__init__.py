@@ -1,0 +1,11 @@
+"""Dependency shims for packages the runtime image may lack.
+
+The only guaranteed third-party stack is jax/numpy (the jax_pallas image);
+everything else must degrade gracefully.  Currently: a miniature
+property-testing shim standing in for ``hypothesis`` so the test suite
+still collects and exercises its properties (over a fixed pseudo-random
+sample rather than hypothesis' adaptive search + shrinking).
+"""
+from .hypothesis_stub import install_hypothesis_stub
+
+__all__ = ["install_hypothesis_stub"]

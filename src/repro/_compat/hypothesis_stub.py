@@ -1,0 +1,193 @@
+"""A miniature ``hypothesis`` stand-in for environments without the real
+package (tests/conftest.py installs it ONLY when ``import hypothesis``
+fails, so an installed hypothesis always wins).
+
+Implements just the surface our tests use -- ``given``, ``settings`` and
+the strategies ``integers, floats, lists, tuples, just, sampled_from``
+plus ``.map`` / ``.flatmap`` / ``.filter`` -- by drawing a deterministic
+pseudo-random sample of ``max_examples`` inputs per test.  No adaptive
+search, no shrinking: strictly weaker than hypothesis, but the properties
+themselves still run (and the suite no longer fails at collection).
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a seeded sampler: draw(rng) -> value."""
+
+    def __init__(self, draw: Callable[["_Rng"], Any]):
+        self._draw = draw
+
+    def draw(self, rng: "_Rng") -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: f(self.draw(rng)))
+
+    def flatmap(self, f: Callable[[Any], "_Strategy"]) -> "_Strategy":
+        return _Strategy(lambda rng: f(self.draw(rng)).draw(rng))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def _draw(rng):
+            for _ in range(1000):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(_draw)
+
+
+class _Rng:
+    """Tiny deterministic PRNG (xorshift64*), independent of numpy so the
+    stub works even in a numpy-less interpreter."""
+
+    def __init__(self, seed: int):
+        self._s = (seed or 1) & 0xFFFFFFFFFFFFFFFF
+
+    def _next(self) -> int:
+        s = self._s
+        s ^= (s >> 12) & 0xFFFFFFFFFFFFFFFF
+        s ^= (s << 25) & 0xFFFFFFFFFFFFFFFF
+        s ^= (s >> 27) & 0xFFFFFFFFFFFFFFFF
+        self._s = s
+        return (s * 0x2545F4914F6CDD1D) & 0xFFFFFFFFFFFFFFFF
+
+    def randint(self, lo: int, hi: int) -> int:
+        """Uniform int in [lo, hi] inclusive."""
+        span = hi - lo + 1
+        return lo + self._next() % span
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (self._next() / 2.0 ** 64) * (hi - lo)
+
+    def choice(self, seq: Sequence) -> Any:
+        return seq[self.randint(0, len(seq) - 1)]
+
+
+# --------------------------------------------------------------- strategies
+
+def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31 - 1
+             ) -> _Strategy:
+    lo, hi = int(min_value), int(max_value)
+    def _draw(rng: _Rng):
+        # mix uniform draws with boundary values (hypothesis-ish bias)
+        r = rng.randint(0, 9)
+        if r == 0:
+            return lo
+        if r == 1:
+            return hi
+        if r == 2 and lo <= 0 <= hi:
+            return 0
+        return rng.randint(lo, hi)
+    return _Strategy(_draw)
+
+
+def floats(min_value: float = -1e9, max_value: float = 1e9,
+           **_kw) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+    def _draw(rng: _Rng):
+        r = rng.randint(0, 9)
+        if r == 0:
+            return lo
+        if r == 1:
+            return hi
+        if r == 2 and lo <= 0.0 <= hi:
+            return 0.0
+        return rng.uniform(lo, hi)
+    return _Strategy(_draw)
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: Optional[int] = None, **_kw) -> _Strategy:
+    hi = max_size if max_size is not None else min_size + 50
+    def _draw(rng: _Rng):
+        n = rng.randint(min_size, hi)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(_draw)
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def just(value: Any) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items))
+
+
+# ---------------------------------------------------------------- decorators
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        inner = fn
+
+        # NB: deliberately *zero-arg* (and no functools.wraps, which would
+        # re-expose the inner signature): pytest must not mistake the
+        # strategy-filled parameters for fixtures
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(inner, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(
+                f"{inner.__module__}.{inner.__qualname__}".encode())
+            rng = _Rng(seed)
+            for i in range(n):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    inner(*drawn, **drawn_kw)
+                except Exception:
+                    print(f"[hypothesis-stub] falsifying example "
+                          f"(#{i}): args={drawn!r} kwargs={drawn_kw!r}",
+                          file=sys.stderr)
+                    raise
+        wrapper.__name__ = getattr(inner, "__name__", "wrapper")
+        wrapper.__doc__ = inner.__doc__
+        wrapper.__module__ = inner.__module__
+        wrapper.__qualname__ = getattr(inner, "__qualname__",
+                                       wrapper.__name__)
+        wrapper.hypothesis_stub = True
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+
+
+def install_hypothesis_stub() -> None:
+    """Register stub 'hypothesis' and 'hypothesis.strategies' modules in
+    sys.modules.  Call ONLY after a failed ``import hypothesis``."""
+    if "hypothesis" in sys.modules:        # real package present: no-op
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "just",
+                 "sampled_from"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -2,9 +2,11 @@
 
 The paper's §3-§5 as a library: see DESIGN.md for the architecture map.
 """
+from .block_cache import BlockCache, CacheStats
 from .catalog import Catalog
 from .database import AvailabilityError, NodeState, Txn, VerticaDB
-from .encodings import EncodedColumn, Encoding, decode_jnp, encode
+from .encodings import (EncodedColumn, Encoding, decode_jnp, device_bytes,
+                        encode, upload_jnp)
 from .epochs import EpochManager
 from .locks import COMPATIBLE, CONVERT, MODES, LockError, LockManager
 from .partitioning import partition_keys
@@ -16,12 +18,13 @@ from .tuple_mover import ProjectionStore, mergeout, moveout, run_tuple_mover
 from .types import BLOCK_ROWS, ColumnDef, SQLType, TableSchema
 
 __all__ = [
-    "AvailabilityError", "BLOCK_ROWS", "COMPATIBLE", "CONVERT", "Catalog",
+    "AvailabilityError", "BLOCK_ROWS", "BlockCache", "COMPATIBLE",
+    "CONVERT", "CacheStats", "Catalog",
     "ColumnDef", "ColumnSMA", "DeleteVector", "EncodedColumn", "Encoding",
     "EpochManager", "LockError", "LockManager", "MODES", "NodeState",
     "PrejoinSpec", "ProjectionDef", "ProjectionStore", "ROSContainer",
     "SQLType", "SegmentationSpec", "TableSchema", "Txn", "VerticaDB", "WOS",
-    "decode_jnp", "encode", "hash_columns", "mergeout", "moveout",
-    "partition_keys", "rebalance_plan", "run_tuple_mover",
-    "super_projection",
+    "decode_jnp", "device_bytes", "encode", "hash_columns", "mergeout",
+    "moveout", "partition_keys", "rebalance_plan", "run_tuple_mover",
+    "super_projection", "upload_jnp",
 ]

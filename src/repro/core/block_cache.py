@@ -1,0 +1,159 @@
+"""Device-resident block cache: a byte-budgeted LRU over column blocks.
+
+Vertica's execution engine is fast because the blocks it scans are already
+sitting in the OS page cache, still encoded (paper §6: the EE operates on
+encoded data wherever it can, and §7 credits warm scans for most of the
+production speedup).  Our analog keeps *device* (HBM) copies of container
+column payloads -- both the encoded arrays and the decoded
+``(n_blocks, block_rows)`` blocks -- so a repeat query never re-uploads or
+re-decodes a column it has already touched.
+
+Keys are ``(container_id, column, kind)``.  ROS containers are immutable
+(§3.7), which makes this cache trivially coherent: an entry can only go
+stale when its container is *retired*, so invalidation hooks live exactly
+where containers die --
+
+  * ``tuple_mover.mergeout``    -- merged-away containers,
+  * ``database._apply_delete``  -- containers gaining a delete vector
+                                   (defensive: masks are keyed by epoch,
+                                   but eager eviction keeps DV rewrites
+                                   honest),
+  * ``database.drop_partition`` -- dropped containers.
+
+Budget accounting is by device bytes; eviction is strict LRU.  The cache is
+deliberately jax-agnostic: values are opaque, sizes are passed in by the
+caller (engine/executor.py computes them from array shapes), so host-only
+storage code can import this module without pulling in jax.
+
+See DESIGN.md §11 ("Block cache & plan cache").
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, Iterable, Optional, Tuple
+
+CacheKey = Tuple[int, str, str]          # (container_id, column, kind)
+
+# entry kinds used by the executor
+KIND_ENCODED = "encoded"                  # dict of device payload arrays
+KIND_DECODED = "decoded"                  # (n_blocks, block_rows) device array
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    bytes_in_use: int = 0
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class BlockCache:
+    """Byte-budgeted LRU of device-resident column blocks."""
+
+    def __init__(self, budget_bytes: int = 256 << 20):
+        assert budget_bytes > 0
+        self.budget_bytes = int(budget_bytes)
+        self.stats = CacheStats()
+        # key -> (value, nbytes); insertion order == LRU order
+        self._entries: "OrderedDict[CacheKey, Tuple[Any, int]]" = \
+            OrderedDict()
+        # container_id -> set of its keys (for O(keys-of-container)
+        # invalidation when the tuple mover retires it)
+        self._by_container: Dict[int, set] = {}
+
+    # ------------------------------------------------------------ reads --
+
+    def get(self, container_id: int, column: str, kind: str) -> Optional[Any]:
+        key = (container_id, column, kind)
+        hit = self._entries.get(key)
+        if hit is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return hit[0]
+
+    def get_or_put(self, container_id: int, column: str, kind: str,
+                   factory, nbytes_of) -> Any:
+        """Fetch, or build via ``factory()`` and insert with
+        ``nbytes_of(value)`` bytes charged."""
+        v = self.get(container_id, column, kind)
+        if v is None:
+            v = factory()
+            self.put(container_id, column, kind, v, int(nbytes_of(v)))
+        return v
+
+    # ----------------------------------------------------------- writes --
+
+    def put(self, container_id: int, column: str, kind: str, value: Any,
+            nbytes: int) -> bool:
+        """Insert (or refresh) an entry; returns False when the item alone
+        exceeds the budget (never cached -- a scan larger than HBM budget
+        must stream)."""
+        nbytes = int(nbytes)
+        if nbytes > self.budget_bytes:
+            return False
+        key = (container_id, column, kind)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.stats.bytes_in_use -= old[1]
+        self._entries[key] = (value, nbytes)
+        self._by_container.setdefault(container_id, set()).add(key)
+        self.stats.bytes_in_use += nbytes
+        self.stats.insertions += 1
+        self._evict_to_budget()
+        return True
+
+    def _evict_to_budget(self):
+        while self.stats.bytes_in_use > self.budget_bytes and self._entries:
+            key, (_, nbytes) = self._entries.popitem(last=False)
+            self.stats.bytes_in_use -= nbytes
+            self.stats.evictions += 1
+            keys = self._by_container.get(key[0])
+            if keys is not None:
+                keys.discard(key)
+                if not keys:
+                    del self._by_container[key[0]]
+
+    # ----------------------------------------------------- invalidation --
+
+    def invalidate_container(self, container_id: int) -> int:
+        """Drop every entry of one (retired) container; returns the number
+        of entries evicted."""
+        keys = self._by_container.pop(container_id, None)
+        if not keys:
+            return 0
+        n = 0
+        for key in keys:
+            ent = self._entries.pop(key, None)
+            if ent is not None:
+                self.stats.bytes_in_use -= ent[1]
+                self.stats.invalidations += 1
+                n += 1
+        return n
+
+    def invalidate_containers(self, ids: Iterable[int]) -> int:
+        return sum(self.invalidate_container(cid) for cid in ids)
+
+    def clear(self):
+        self._entries.clear()
+        self._by_container.clear()
+        self.stats.bytes_in_use = 0
+
+    # ------------------------------------------------------------- misc --
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return list(self._entries.keys())

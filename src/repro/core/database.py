@@ -23,6 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .block_cache import BlockCache
 from .catalog import Catalog, TableEntry
 from .epochs import EpochManager
 from .locks import LockManager
@@ -69,13 +70,17 @@ class Txn:
 
 class VerticaDB:
     def __init__(self, n_nodes: int = 4, k_safety: int = 1,
-                 block_rows: int = 256):
+                 block_rows: int = 256,
+                 cache_budget_bytes: int = 256 << 20):
         assert k_safety in (0, 1)
         self.catalog = Catalog(n_nodes=n_nodes, k_safety=k_safety)
         self.nodes = [NodeState(i) for i in range(n_nodes)]
         self.epochs = EpochManager()
         self.locks = LockManager()
         self.block_rows = block_rows
+        # device-resident block cache, shared by every store of this DB
+        # (our HBM analog of Vertica leaning on the OS page cache)
+        self.block_cache = BlockCache(cache_budget_bytes)
 
     # ------------------------------------------------------------- DDL --
 
@@ -107,7 +112,8 @@ class VerticaDB:
 
     def _init_stores(self, proj: ProjectionDef):
         for node in self.nodes:
-            node.stores[proj.name] = ProjectionStore(proj, WOS(proj.name))
+            node.stores[proj.name] = ProjectionStore(
+                proj, WOS(proj.name), cache=self.block_cache)
 
     # ------------------------------------------------------------- txn --
 
@@ -269,6 +275,10 @@ class VerticaDB:
                             DeleteVector.build(
                                 c.id, pos,
                                 np.full(pos.size, epoch, np.int64)).to_ros())
+                        # evict cached blocks of a container whose delete
+                        # state changed (visibility is epoch-keyed, but
+                        # eager eviction keeps DV rewrites honest)
+                        store.invalidate_cached([c.id])
                 data, eps, _ = store.wos.snapshot()
                 if len(eps):
                     try:
@@ -408,6 +418,7 @@ class VerticaDB:
                             if c.partition_key == partition_key]
                     store.containers = [c for c in store.containers
                                         if c.partition_key != partition_key]
+                    store.invalidate_cached([c.id for c in drop])
                     for c in drop:
                         store.delete_vectors.pop(c.id, None)
         finally:

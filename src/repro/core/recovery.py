@@ -116,6 +116,8 @@ def _truncate_past(db: VerticaDB, store: ProjectionStore, epoch: int):
         if dpos.size:
             store.delete_vectors[nc.id] = [DeleteVector.build(
                 nc.id, dpos, dels[sel][dpos]).to_ros()]
+    retired = {c.id for c in store.containers} - {c.id for c in kept}
+    store.invalidate_cached(retired)   # truncation retires containers
     store.containers = kept
 
 
@@ -347,3 +349,7 @@ def restore(db: VerticaDB, img: Dict):
             st.wos.clear()
             st.wos_delete_epochs = []
     db.epochs.current_epoch = img["epoch"] + 1
+    # the epoch counter rolls BACK: epoch-keyed valid@{epoch} cache
+    # entries from the abandoned timeline would otherwise be revived
+    # once the counter re-reaches their epoch -- drop everything
+    db.block_cache.clear()

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .block_cache import BlockCache
 from .projection import ProjectionDef
 from .storage import DeleteVector, ROSContainer, WOS
 from .types import SQLType
@@ -45,6 +46,13 @@ class ProjectionStore:
     # WOS delete epochs aligned to the WOS snapshot order (0 = live)
     wos_delete_epochs: List[np.ndarray] = dataclasses.field(
         default_factory=list)
+    # device block cache shared across the node (set by VerticaDB); entries
+    # of a container must be dropped when the container is retired
+    cache: Optional[BlockCache] = None
+
+    def invalidate_cached(self, container_ids) -> None:
+        if self.cache is not None:
+            self.cache.invalidate_containers(container_ids)
 
     def ros_rows(self) -> int:
         return sum(c.n_rows for c in self.containers)
@@ -178,6 +186,7 @@ def mergeout(store: ProjectionStore, *, sql_types: Dict[str, SQLType],
         block_rows=block_rows)
     ids = {c.id for c in cand}
     store.containers = [c for c in store.containers if c.id not in ids]
+    store.invalidate_cached(ids)   # merged-away containers are retired
     for cid in ids:
         store.delete_vectors.pop(cid, None)
     store.containers.append(merged)

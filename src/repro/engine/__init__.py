@@ -1,5 +1,6 @@
+from .executor import PLAN_CACHE, PlanCache
 from .expr import Col, Expr, Lit, col, lit
 from .pipeline import ExecStats, JoinSpec, Query, execute
 
-__all__ = ["Col", "ExecStats", "Expr", "JoinSpec", "Lit", "Query", "col",
-           "execute", "lit"]
+__all__ = ["Col", "ExecStats", "Expr", "JoinSpec", "Lit", "PLAN_CACHE",
+           "PlanCache", "Query", "col", "execute", "lit"]

@@ -1,0 +1,315 @@
+"""Warm-path executor: batched container scans + a plan-signature compile
+cache (paper §6 "run fast on data already near the processor", §7 "plan
+once, execute many").
+
+Cold path (engine/pipeline.py before this module existed): every
+``execute()`` re-uploaded each encoded column host->device, re-decoded it,
+and re-traced the scan->predicate->mask->aggregate program, per container,
+per query.  Repeat queries -- the heavy-traffic scenario in ROADMAP.md --
+paid full cold-start cost each time.
+
+Warm path, three pieces:
+
+  1. **Block cache** (core/block_cache.py): encoded payloads and decoded
+     ``(n_blocks, block_rows)`` blocks stay device-resident keyed by
+     ``(container_id, column)``; ROS immutability makes entries coherent
+     until the tuple mover retires the container.
+  2. **Batched scan**: instead of one Python loop iteration (and one
+     device round-trip) per container, the SMA-surviving blocks of *all*
+     containers are gathered from the cache and concatenated into one
+     flat array per column -- a single device program regardless of how
+     fragmented the ROS is.
+  3. **Plan cache**: the fused predicate->mask->groupby program is built
+     once per *plan signature* (projection, predicate structure+literals,
+     groupby algorithm, agg set, block shape) and memoized; the second
+     occurrence of any query shape skips closure construction and hits
+     jax's compile cache instead of re-tracing.
+
+See DESIGN.md §11 ("Block cache & plan cache").
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.block_cache import BlockCache, KIND_DECODED, KIND_ENCODED
+from ..core.database import VerticaDB
+from ..core.encodings import decode_jnp, device_bytes, upload_jnp
+from ..core.storage import ROSContainer
+from . import operators as ops
+from .expr import Expr
+
+KIND_VALID = "valid"      # per-(container, as_of) visibility blocks
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: plan signature -> fused compiled program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+class PlanCache:
+    """Bounded memo of fused executables keyed by plan signature.  The
+    signature captures everything that changes the traced program --
+    projection, predicate shape *and* literals, groupby algorithm and
+    domain, agg set, and the column set -- so a hit is exactly 'this query
+    shape has run before'."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self.stats = PlanCacheStats()
+        self._fns: "OrderedDict[tuple, Callable]" = OrderedDict()
+
+    def get_or_build(self, sig: tuple, build: Callable[[], Callable]
+                     ) -> Tuple[Callable, bool]:
+        fn = self._fns.get(sig)
+        if fn is not None:
+            self._fns.move_to_end(sig)
+            self.stats.hits += 1
+            return fn, True
+        fn = build()
+        self._fns[sig] = fn
+        if len(self._fns) > self.max_entries:
+            self._fns.popitem(last=False)
+        self.stats.misses += 1
+        return fn, False
+
+    def clear(self):
+        self._fns.clear()
+
+
+# one process-wide plan cache: plans are keyed by projection name and
+# query shape, not by DB identity, and jitted programs are shareable
+PLAN_CACHE = PlanCache()
+
+
+# ---------------------------------------------------------------------------
+# Cached device blocks
+# ---------------------------------------------------------------------------
+
+def cached_decoded(cache: Optional[BlockCache], c: ROSContainer,
+                   name: str) -> jax.Array:
+    """(n_blocks, block_rows) decoded device blocks of one column, via the
+    cache: encoded payload uploaded once, decoded blocks kept resident."""
+    col = c.columns[name]
+    if cache is None:
+        return decode_jnp(col)
+
+    def _decode():
+        enc = cache.get_or_put(c.id, name, KIND_ENCODED,
+                               lambda: upload_jnp(col), device_bytes)
+        return decode_jnp(col, enc)
+
+    return cache.get_or_put(c.id, name, KIND_DECODED, _decode, device_bytes)
+
+
+def _valid_blocks_np(store, c: ROSContainer, as_of: int,
+                     counts: np.ndarray) -> np.ndarray:
+    """(n_blocks, block_rows) bool: inside n_rows, epoch-visible, not
+    deleted as of the snapshot."""
+    first = next(iter(c.columns.values()))
+    nb, br = first.n_blocks, first.block_rows
+    pos = np.arange(br)[None, :]
+    valid = pos < counts[:, None]                     # inside n_rows
+    dead = store.deleted_mask(c, as_of) | (c.epochs > as_of)
+    if dead.any():
+        flat = np.zeros(nb * br, bool)
+        flat[np.flatnonzero(dead)] = True
+        valid &= ~flat.reshape(nb, br)
+    return valid
+
+
+def cached_valid(cache: Optional[BlockCache], store, c: ROSContainer,
+                 as_of: int, counts: np.ndarray) -> jax.Array:
+    """Device copy of the container's visibility blocks at ``as_of``.
+    Keyed by epoch: a commit advances the epoch and naturally misses; a
+    delete additionally invalidates the container's entries outright."""
+    if cache is None:
+        return jnp.asarray(_valid_blocks_np(store, c, as_of, counts))
+    return cache.get_or_put(
+        c.id, f"@{as_of}", KIND_VALID,
+        lambda: jnp.asarray(_valid_blocks_np(store, c, as_of, counts)),
+        device_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Batched scan over all containers of a plan
+# ---------------------------------------------------------------------------
+
+def scan_stores_batched(db: VerticaDB, plan, need: Sequence[str],
+                        predicate: Optional[Expr], sip, as_of: int,
+                        stats) -> Optional[ops.ScanResult]:
+    """Gather the SMA-surviving blocks of every ROS container behind
+    ``plan.sources`` straight from the device cache and concatenate them
+    into one flat array per column.  Pruning decisions stay host-side
+    (they read tiny SMA arrays); all row-level work happens in one device
+    program downstream.  Returns None when everything was pruned."""
+    need = sorted(set(need) | (predicate.columns() if predicate else set()))
+    cache = getattr(db, "block_cache", None)
+    col_parts: Dict[str, List[jax.Array]] = {name: [] for name in need}
+    valid_parts: List[jax.Array] = []
+    pruned = total = 0
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        for c in store.containers:
+            if not need:
+                continue
+            first = c.columns[need[0]]
+            nb = first.n_blocks
+            total += nb
+            # --- SMA block pruning (paper §3.5), host-side ---
+            keep = np.ones(nb, dtype=bool)
+            if predicate is not None:
+                for colname, (lo, hi) in predicate.bounds().items():
+                    if colname in c.smas:
+                        keep &= c.smas[colname].prune_blocks(lo, hi)
+            kept_idx = np.flatnonzero(keep)
+            pruned += nb - kept_idx.size
+            if kept_idx.size == 0:
+                continue
+            stats.containers_scanned += 1
+            whole = kept_idx.size == nb
+            for name in need:
+                blocks = cached_decoded(cache, c, name)
+                col_parts[name].append(blocks if whole
+                                       else blocks[kept_idx])
+            counts = c.smas[need[0]].counts
+            vb = cached_valid(cache, store, c, as_of, counts)
+            valid_parts.append(vb if whole else vb[kept_idx])
+    stats.blocks_pruned, stats.blocks_total = pruned, total
+    if not valid_parts:
+        return None
+    if len(valid_parts) == 1:
+        cols = {n: p[0].reshape(-1) for n, p in col_parts.items()}
+        valid = valid_parts[0].reshape(-1)
+    else:
+        cols = {n: jnp.concatenate(p).reshape(-1)
+                for n, p in col_parts.items()}
+        valid = jnp.concatenate(valid_parts).reshape(-1)
+    if predicate is not None:
+        valid = valid & jnp.asarray(predicate(cols), bool)
+    if sip is not None:
+        valid = valid & sip(cols)
+    return ops.ScanResult({k: v for k, v in cols.items()}, valid,
+                          pruned, total)
+
+
+# ---------------------------------------------------------------------------
+# Fused scan -> predicate -> mask -> aggregate (single jitted program)
+# ---------------------------------------------------------------------------
+
+def _plan_signature(db: VerticaDB, q, plan, algo: str, domain: int,
+                    br: int) -> tuple:
+    pred_sig = q.predicate.signature() if q.predicate is not None else ""
+    return ("fused", plan.projection, pred_sig, q.group_by, algo,
+            int(domain), tuple(q.aggs), br)
+
+
+def _build_fused(predicate: Optional[Expr], group_by: Optional[str],
+                 algo: str, domain: int,
+                 aggs: Tuple[Tuple[str, str, str], ...]) -> Callable:
+    """One XLA program: predicate eval, mask AND, groupby/aggregate.  The
+    expression tree is traced *inside* the jit so the whole pipeline fuses;
+    groupby_dense/groupby_sort inline (nested jit) rather than launching
+    separately."""
+
+    values_cols = tuple(sorted({c for _, c, kind in aggs
+                                if kind != "count"}))
+
+    @jax.jit
+    def fused(cols: Dict[str, jax.Array], valid: jax.Array):
+        if predicate is not None:
+            valid = valid & jnp.asarray(predicate(cols), bool)
+        values = {c: cols[c] for c in values_cols}
+        if group_by is None:
+            keys = jnp.zeros(valid.shape[0], jnp.int32)
+            return ops.groupby_dense(keys, valid, values, 1, aggs)
+        keys = cols[group_by]
+        if algo == "dense":
+            return ops.groupby_dense(keys.astype(jnp.int32), valid,
+                                     values, domain, aggs)
+        return ops.groupby_sort(keys, valid, values, domain, aggs)
+
+    return fused
+
+
+def _stores_have_wos(db: VerticaDB, plan) -> bool:
+    return any(db.nodes[host].stores[owner].wos.n_rows
+               for host, owner in plan.sources)
+
+
+def execute_fused(db: VerticaDB, q, plan, as_of: int,
+                  stats) -> Optional[Dict[str, np.ndarray]]:
+    """Run an aggregate query as one cached fused program.  Returns None
+    when the query shape is outside the fused subset (join, WOS rows
+    pending, or no aggregation) -- the caller falls back to the general
+    pipeline."""
+    if q.join is not None or not (q.aggs or q.group_by is not None):
+        return None
+    if _stores_have_wos(db, plan):
+        return None   # WOS rows need the unencoded side-scan
+
+    # groupby algorithm with a STATIC domain (jit-friendly): dense needs
+    # the key domain from container SMAs; unknown/oversized -> sort
+    algo = plan.groupby_algorithm
+    if algo == "rle":
+        algo = "sort"
+    domain = 1
+    if q.group_by is not None:
+        from ..planner.planner import _domain_estimate
+        dom = _domain_estimate(db, db.catalog.projections[plan.projection],
+                               q.group_by)
+        if algo == "dense" and (dom is None
+                                or dom > plan.dense_domain_limit):
+            algo = "sort"
+            stats.groupby_algorithm = "sort (runtime switch)"
+        domain = int(dom) if algo == "dense" else plan.max_groups
+
+    scan = scan_stores_batched(db, plan, sorted(q.needed_columns()),
+                               q.predicate, None, as_of, stats)
+    if scan is None:
+        return None   # fully pruned; pipeline builds the empty result
+    stats.rows_scanned = int(scan.valid.shape[0])
+
+    br = db.block_rows
+    sig = _plan_signature(db, q, plan, algo, domain, br)
+    fused, hit = PLAN_CACHE.get_or_build(
+        sig, lambda: _build_fused(q.predicate, q.group_by, algo, domain,
+                                  tuple(q.aggs)))
+    stats.plan_cache = "hit" if hit else "miss"
+    res = fused(scan.columns, scan.valid)
+
+    # --- host-side result shaping (small outputs) ---
+    aggs = tuple(q.aggs)
+    if q.group_by is None:
+        return {name: np.asarray(v)[:1] for name, v in res.items()}
+    if algo == "dense":
+        counts = np.asarray(res["group_count"])
+        sel = counts > 0
+        out = {q.group_by: np.flatnonzero(sel), "group_count": counts[sel]}
+        for name, _, _ in aggs:
+            out[name] = np.asarray(res[name])[sel]
+    else:
+        n = int(res["n_groups"])
+        out = {q.group_by: np.asarray(res["group_keys"])[:n],
+               "group_count": np.asarray(res["group_count"])[:n]}
+        for name, _, _ in aggs:
+            out[name] = np.asarray(res[name])[:n]
+    if q.order_by:
+        key = out.get(q.order_by, out.get(q.group_by))
+        order = np.argsort(key)
+        if q.descending:
+            order = order[::-1]
+        out = {c: v[order] for c, v in out.items()}
+    if q.limit:
+        out = {c: v[: q.limit] for c, v in out.items()}
+    return out

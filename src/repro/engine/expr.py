@@ -45,6 +45,12 @@ class Expr:
     def columns(self) -> set:
         return set()
 
+    def signature(self) -> str:
+        """Stable structural key (shape + literals) for the executor's
+        plan cache: two predicates with equal signatures build identical
+        jnp programs."""
+        raise NotImplementedError
+
 
 def _wrap(v) -> "Expr":
     return v if isinstance(v, Expr) else Lit(v)
@@ -60,6 +66,9 @@ class Col(Expr):
     def columns(self):
         return {self.name}
 
+    def signature(self):
+        return f"c:{self.name}"
+
 
 @dataclasses.dataclass(eq=False)
 class Lit(Expr):
@@ -67,6 +76,9 @@ class Lit(Expr):
 
     def __call__(self, cols):
         return self.value
+
+    def signature(self):
+        return f"l:{self.value!r}"
 
 
 _OPS: Dict[str, Callable] = {
@@ -90,6 +102,9 @@ class BinOp(Expr):
 
     def columns(self):
         return self.lhs.columns() | self.rhs.columns()
+
+    def signature(self):
+        return f"({self.lhs.signature()}{self.op}{self.rhs.signature()})"
 
     def bounds(self):
         # comparison of a column against a literal

@@ -72,10 +72,7 @@ def scan_container(c: ROSContainer, columns: Sequence[str],
     pos_in_block = np.arange(br)[None, :]
     valid_np = pos_in_block < counts[kept_idx][:, None]
     if deleted is not None:
-        del_blocks = np.zeros((nb, br), bool)
-        del_blocks.reshape(-1)[: c.n_rows] = deleted[: c.n_rows] \
-            if deleted.shape[0] >= c.n_rows else False
-        # deleted is positional over the container
+        # deleted is positional over the container; spread over padded blocks
         flat = np.zeros(nb * br, bool)
         flat[np.flatnonzero(deleted)] = True
         valid_np &= ~flat.reshape(nb, br)[kept_idx]
@@ -216,6 +213,15 @@ def groupby_rle(key_col: EncodedColumn, valid_counts: np.ndarray,
     §6.1 'operate directly on encoded data' fast path (Pallas twin:
     kernels/rle_scan_agg.py)."""
     assert key_col.encoding == Encoding.RLE
+    if jax.default_backend() == "tpu":
+        # fused Pallas path: per-key count straight off the runs (grouped
+        # twin of the scalar kernel; CPU stays on the XLA scatter below
+        # because interpret-mode Pallas is row-at-a-time Python)
+        from ..kernels import ops as kops
+        out = kops.rle_grouped_agg(
+            jnp.asarray(key_col.arrays["run_values"]),
+            jnp.asarray(key_col.arrays["run_lengths"]), domain=domain)
+        return {"group_count": out[0].astype(_int_dtype())}
     rv = jnp.asarray(key_col.arrays["run_values"]).reshape(-1)
     rl = jnp.asarray(key_col.arrays["run_lengths"]).reshape(-1)
     # clamp tail-block padding runs: total rows cap
@@ -241,8 +247,13 @@ def groupby_prepass(keys: jax.Array, valid: jax.Array,
     kb = kp.reshape(nb, block)
     vb = vp.reshape(nb, block)
 
+    # avg does not distribute over blocks: aggregate partial SUMs instead
+    # and divide by the combined counts at the end.
+    part_aggs = tuple((name, col_, "sum" if agg == "avg" else agg)
+                      for name, col_, agg in aggs)
+
     def per_block(kb1, vb1, vals1):
-        return groupby_dense(kb1, vb1, vals1, domain, aggs)
+        return groupby_dense(kb1, vb1, vals1, domain, part_aggs)
 
     partials = jax.vmap(per_block)(kb, vb,
                                    {c: v.reshape(nb, block)
@@ -250,20 +261,15 @@ def groupby_prepass(keys: jax.Array, valid: jax.Array,
     out = {}
     for name, v in partials.items():
         if name == "group_count" or _COMBINE.get(
-                _agg_kind(name, aggs), "add") == "add":
+                _agg_kind(name, part_aggs), "add") == "add":
             out[name] = v.sum(axis=0)
-        elif _COMBINE[_agg_kind(name, aggs)] == "min":
+        elif _COMBINE[_agg_kind(name, part_aggs)] == "min":
             out[name] = v.min(axis=0)
         else:
             out[name] = v.max(axis=0)
-    # fix avg (sum of per-block avgs is wrong): recompute from sum/count
     for name, col_, agg in aggs:
         if agg == "avg":
-            s = jax.vmap(per_block)(kb, vb, {c: v.reshape(nb, block)
-                                             for c, v in vals.items()})
-            # avg handled via dense path instead
-            out[name] = groupby_dense(keys, valid, values, domain,
-                                      aggs)[name]
+            out[name] = out[name] / jnp.maximum(out["group_count"], 1)
     return out
 
 

@@ -21,6 +21,7 @@ import numpy as np
 from ..core.database import VerticaDB
 from ..core.encodings import Encoding
 from .expr import Col, Expr
+from . import executor as fused_exec
 from . import operators as ops
 from .sip import sip_filter
 
@@ -74,6 +75,11 @@ class ExecStats:
     rows_scanned: int = 0
     sip_applied: bool = False
     wall_s: float = 0.0
+    # warm-path telemetry (engine/executor.py)
+    fused: bool = False
+    plan_cache: str = ""            # "hit" / "miss" / "" (not attempted)
+    block_cache_hits: int = 0
+    block_cache_misses: int = 0
 
 
 def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
@@ -88,24 +94,36 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
                       groupby_algorithm=plan.groupby_algorithm,
                       join_strategy=plan.join_strategy)
     as_of = as_of if as_of is not None else db.epochs.latest_queryable()
+    bc = db.block_cache.stats
+    bc_h0, bc_m0 = bc.hits, bc.misses
+
+    def _finish(out):
+        stats.block_cache_hits = bc.hits - bc_h0
+        stats.block_cache_misses = bc.misses - bc_m0
+        stats.wall_s = time.time() - t0
+        return out, stats
 
     # --- scalar COUNT directly on RLE runs (predicate on sort leader) ---
     if plan.scalar_rle:
         res = _rle_scalar_count(db, q, plan, as_of)
         if res is not None:
             stats.groupby_algorithm = "rle-scalar"
-            stats.wall_s = time.time() - t0
-            return res, stats
+            return _finish(res)
 
     # --- RLE-direct fast path: aggregate on encoded data, zero decode ---
     if plan.groupby_algorithm == "rle" and q.join is None \
             and q.predicate is None:
         res = _rle_groupby(db, q, plan, as_of)
         if res is not None:
-            stats.wall_s = time.time() - t0
-            return res, stats
+            return _finish(res)
         stats.groupby_algorithm = "sort (rle fallback)"
         plan = dataclasses.replace(plan, groupby_algorithm="sort")
+
+    # --- warm path: cached fused scan->predicate->aggregate program ---
+    res = fused_exec.execute_fused(db, q, plan, as_of, stats)
+    if res is not None:
+        stats.fused = True
+        return _finish(res)
 
     # --- build side + SIP (§6.1) ---
     sip = None
@@ -126,16 +144,14 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
     proj = db.catalog.projections[plan.projection]
     need &= set(proj.columns)
     scans = []
+    # ROS containers: one batched device-cached scan over every source
+    # (engine/executor.py), replacing the per-container Python loop
+    ros = fused_exec.scan_stores_batched(db, plan, sorted(need),
+                                         q.predicate, sip, as_of, stats)
+    if ros is not None:
+        scans.append(ros)
     for host, owner in plan.sources:
         store = db.nodes[host].stores[owner]
-        for c in store.containers:
-            epoch_ok = c.epochs <= as_of
-            deleted = store.deleted_mask(c, as_of) | ~epoch_ok
-            r = ops.scan_container(c, sorted(need), q.predicate,
-                                   deleted=deleted, sip=sip)
-            if r is not None:
-                scans.append(r)
-                stats.containers_scanned += 1
         # WOS rows participate too (unencoded scan)
         data, eps, _ = store.wos.snapshot()
         if len(eps):
@@ -153,7 +169,6 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
     merged = ops.concat_scans(scans)
     if merged is None:
         # fully pruned / empty: return a structured empty result
-        stats.wall_s = time.time() - t0
         out = {c: np.zeros(0, np.int64) for c in q.columns}
         if q.group_by:
             out[q.group_by] = np.zeros(0, np.int64)
@@ -161,7 +176,7 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
         for name, _, kind in q.aggs:
             out[name] = (np.zeros(1) if q.group_by is None
                          else np.zeros(0))
-        return out, stats
+        return _finish(out)
     stats.blocks_pruned = merged.pruned_blocks
     stats.blocks_total = merged.total_blocks
     cols, valid = dict(merged.columns), merged.valid
@@ -186,8 +201,7 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
             out = {c: v[order] for c, v in out.items()}
         if q.limit:
             out = {c: v[: q.limit] for c, v in out.items()}
-    stats.wall_s = time.time() - t0
-    return out, stats
+    return _finish(out)
 
 
 def _rle_scalar_count(db: VerticaDB, q: Query, plan, as_of: int

@@ -22,7 +22,8 @@ from . import ref
 from .delta_decode import delta_decode as _delta_decode
 from .flash_attention import flash_attention as _flash_attention
 from .hash_groupby import onehot_groupby as _onehot_groupby
-from .rle_scan_agg import rle_filter_agg as _rle_filter_agg
+from .rle_scan_agg import (rle_filter_agg as _rle_filter_agg,
+                           rle_grouped_agg as _rle_grouped_agg)
 from .sip_probe import semijoin_probe as _semijoin_probe
 
 
@@ -35,6 +36,19 @@ def rle_filter_agg(run_values, run_lengths, *, lo, hi, force_ref=False):
         return ref.rle_filter_agg_ref(run_values, run_lengths, lo, hi)
     return _rle_filter_agg(run_values, run_lengths, lo=lo, hi=hi,
                            interpret=not _on_tpu())
+
+
+def rle_grouped_agg(run_values, run_lengths, values=None, *, domain,
+                    lo=-3.0e38, hi=3.0e38, force_ref=False):
+    """Per-key [count, sum, min, max] over a dense domain, straight from
+    RLE runs (the §6.1 grouped 'operate on encoded data' path)."""
+    if force_ref:
+        return ref.rle_grouped_agg_ref(
+            run_values, run_lengths,
+            run_values if values is None else values, domain, lo, hi)
+    return _rle_grouped_agg(run_values, run_lengths, values,
+                            domain=domain, lo=lo, hi=hi,
+                            interpret=not _on_tpu())
 
 
 def onehot_groupby(keys, values, *, domain, force_ref=False):

@@ -22,6 +22,28 @@ def rle_filter_agg_ref(run_values: jax.Array, run_lengths: jax.Array,
     return jnp.stack([cnt, s, mx], axis=1)
 
 
+def rle_grouped_agg_ref(run_values: jax.Array, run_lengths: jax.Array,
+                        values: jax.Array, domain: int,
+                        lo: float, hi: float) -> jax.Array:
+    """Per-key (count, sum, min, max) over a dense domain, from RLE runs:
+    a run of key k and length L contributes L rows of its value.  Runs
+    with key outside [lo, hi] (or [0, domain)) or zero length drop out.
+    Returns (4, domain) f32; empty keys: count 0, sum 0, min/max at the
+    +-3.4e38 sentinels (matching the Pallas kernel)."""
+    rv = run_values.astype(jnp.float32).reshape(-1)
+    rl = run_lengths.astype(jnp.float32).reshape(-1)
+    val = values.astype(jnp.float32).reshape(-1)
+    m = (rv >= lo) & (rv <= hi) & (rl > 0) & (rv >= 0) & (rv < domain)
+    k = jnp.clip(run_values.astype(jnp.int32).reshape(-1), 0, domain - 1)
+    mf = m.astype(jnp.float32)
+    cnt = jnp.zeros(domain, jnp.float32).at[k].add(rl * mf)
+    s = jnp.zeros(domain, jnp.float32).at[k].add(val * rl * mf)
+    pos, neg = jnp.float32(3.4e38), jnp.float32(-3.4e38)
+    mn = jnp.full(domain, pos).at[k].min(jnp.where(m, val, pos))
+    mx = jnp.full(domain, neg).at[k].max(jnp.where(m, val, neg))
+    return jnp.stack([cnt, s, mn, mx], axis=0)
+
+
 def onehot_groupby_ref(keys: jax.Array, values: jax.Array,
                        domain: int) -> jax.Array:
     """Per-block dense partial GroupBy (count+sum) via one-hot contraction.

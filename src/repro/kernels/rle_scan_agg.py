@@ -1,4 +1,4 @@
-"""Fused RLE scan->filter->aggregate Pallas kernel.
+"""Fused RLE scan->filter->aggregate Pallas kernels.
 
 The paper's flagship 'operate directly on encoded data' (§6.1): a scan over
 an RLE column evaluates the predicate per RUN and aggregates len-weighted
@@ -6,8 +6,20 @@ contributions -- O(runs) work and O(runs) HBM bytes instead of O(rows).
 On TPU this turns the encoding ratio directly into memory-roofline headroom
 (DESIGN.md hardware-adaptation table).
 
+Two kernels:
+
+  * ``rle_filter_agg``  -- scalar [count, sum, max] of rows in [lo, hi]
+                           (Q1-shaped: filtered scalar aggregate).
+  * ``rle_grouped_agg`` -- per-key [count, sum, min, max] over a dense key
+                           domain (Q2/Q3-shaped: filtered GROUP BY).  The
+                           scatter is a one-hot contraction so the MXU does
+                           the grouping; the (4, domain) accumulator stays
+                           VMEM-resident across grid steps (the revisiting
+                           output pattern: every step maps to block (0,0)).
+
 Tiling: grid over blocks; each step holds one block's (run_values,
-run_lengths) strip in VMEM -- R is padded to a multiple of 128 lanes.
+run_lengths) strip in VMEM -- R and domain are padded to multiples of 128
+lanes.
 """
 from __future__ import annotations
 
@@ -52,3 +64,81 @@ def rle_filter_agg(run_values: jax.Array, run_lengths: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((nb, 3), jnp.float32),
         interpret=interpret,
     )(run_values, run_lengths)
+
+
+_NEG = -3.4e38   # min/max sentinels (finite: inf trips the VPU comparison
+_POS = 3.4e38    # lowering on some targets); python floats so the kernel
+                 # closes over static constants, not traced arrays
+
+
+def _grouped_kernel(rv_ref, rl_ref, val_ref, out_ref, *, domain: int,
+                    valid_domain: int, lo: float, hi: float):
+    # the (4, domain) accumulator block revisits every grid step: zero it
+    # once, then fold this block's runs in
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[0, :] = jnp.zeros((domain,), jnp.float32)
+        out_ref[1, :] = jnp.zeros((domain,), jnp.float32)
+        out_ref[2, :] = jnp.full((domain,), _POS, jnp.float32)
+        out_ref[3, :] = jnp.full((domain,), _NEG, jnp.float32)
+
+    rv = rv_ref[...].astype(jnp.float32)           # (1, R) key per run
+    rl = rl_ref[...].astype(jnp.float32)           # (1, R) rows per run
+    val = val_ref[...].astype(jnp.float32)         # (1, R) value per run
+    R = rv.shape[1]
+    m = (rv >= lo) & (rv <= hi) & (rl > 0)         # predicate per RUN
+    m &= (rv >= 0) & (rv < valid_domain)           # keys must be in-domain
+    k = jnp.clip(rv_ref[...].astype(jnp.int32), 0, domain - 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (R, domain), 1)
+    hit = (k.reshape(R, 1) == cols) & m.reshape(R, 1)      # (R, domain)
+    oh = hit.astype(jnp.float32)
+    # count/sum land on the MXU as (1,R)@(R,domain) contractions
+    cnt = (rl * m.astype(jnp.float32)) @ oh                # (1, domain)
+    s = (val * rl * m.astype(jnp.float32)) @ oh
+    mn = jnp.where(hit, val.reshape(R, 1), _POS).min(axis=0)
+    mx = jnp.where(hit, val.reshape(R, 1), _NEG).max(axis=0)
+    out_ref[0, :] += cnt[0]
+    out_ref[1, :] += s[0]
+    out_ref[2, :] = jnp.minimum(out_ref[2, :], mn)
+    out_ref[3, :] = jnp.maximum(out_ref[3, :], mx)
+
+
+@functools.partial(jax.jit, static_argnames=("domain", "lo", "hi",
+                                             "interpret"))
+def rle_grouped_agg(run_values: jax.Array, run_lengths: jax.Array,
+                    values: jax.Array = None, *, domain: int,
+                    lo: float = -3.0e38, hi: float = 3.0e38,
+                    interpret: bool = False) -> jax.Array:
+    """(nb, R) runs -> (4, domain) per-key [count, sum, min, max].
+
+    ``run_values`` carries the (dense, non-negative) group key per run;
+    ``values`` the per-run aggregate value (every row of a run contributes
+    that value -- defaults to the key itself, the C-Store 'aggregate the
+    sort leader' case).  Runs whose key falls outside [lo, hi] or with
+    zero length are dropped, so padding runs never contribute.  Keys with
+    no surviving rows report count 0, sum 0, min +BIG, max -BIG.
+    """
+    if values is None:
+        values = run_values
+    nb, R = run_values.shape
+    padr = (-R) % 128
+    if padr:
+        run_values = jnp.pad(run_values, ((0, 0), (0, padr)))
+        run_lengths = jnp.pad(run_lengths, ((0, 0), (0, padr)))
+        values = jnp.pad(values, ((0, 0), (0, padr)))
+        R += padr
+    dpad = -(-domain // 128) * 128
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, domain=dpad,
+                          valid_domain=domain, lo=lo, hi=hi),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, R), lambda i: (i, 0)),
+            pl.BlockSpec((1, R), lambda i: (i, 0)),
+            pl.BlockSpec((1, R), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((4, dpad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((4, dpad), jnp.float32),
+        interpret=interpret,
+    )(run_values, run_lengths, values)
+    return out[:, :domain]

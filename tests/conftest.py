@@ -3,6 +3,12 @@ only launch/dryrun.py requests 512 placeholder devices (assignment rule)."""
 import numpy as np
 import pytest
 
+try:                       # property tests prefer the real hypothesis;
+    import hypothesis      # noqa: F401
+except ImportError:        # image without it: a deterministic mini-shim
+    from repro._compat import install_hypothesis_stub
+    install_hypothesis_stub()
+
 from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
 
 

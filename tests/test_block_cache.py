@@ -1,0 +1,220 @@
+"""Block cache + plan-cached fused executor: correctness under reuse,
+invalidation (commit/delete/mergeout), LRU budgets; plus the scan
+tail-block delete masking and the prepass-avg satellite fixes."""
+import numpy as np
+
+from repro.core import (BlockCache, ColumnDef, SQLType, TableSchema)
+from repro.core.projection import super_projection
+from repro.core.storage import ROSContainer
+from repro.engine import Query, col, execute
+from repro.engine import operators as ops
+
+
+# ---------------------------------------------------------------------------
+# LRU mechanics (no jax involved: values are opaque)
+# ---------------------------------------------------------------------------
+
+def test_lru_evicts_under_byte_budget():
+    cache = BlockCache(budget_bytes=1000)
+    for cid in range(5):
+        assert cache.put(cid, "c", "decoded", f"v{cid}", 300)
+    # 5 * 300 > 1000: the two oldest must have been evicted
+    assert cache.stats.bytes_in_use <= 1000
+    assert cache.stats.evictions == 2
+    assert cache.get(0, "c", "decoded") is None
+    assert cache.get(1, "c", "decoded") is None
+    assert cache.get(4, "c", "decoded") == "v4"
+
+
+def test_lru_get_refreshes_recency():
+    cache = BlockCache(budget_bytes=900)
+    for cid in range(3):
+        cache.put(cid, "c", "decoded", cid, 300)
+    assert cache.get(0, "c", "decoded") == 0     # 0 becomes most-recent
+    cache.put(3, "c", "decoded", 3, 300)         # evicts 1, not 0
+    assert cache.get(1, "c", "decoded") is None
+    assert cache.get(0, "c", "decoded") == 0
+
+
+def test_oversized_item_never_cached():
+    cache = BlockCache(budget_bytes=100)
+    assert not cache.put(1, "c", "decoded", "huge", 101)
+    assert len(cache) == 0 and cache.stats.bytes_in_use == 0
+
+
+def test_invalidate_container_drops_all_kinds():
+    cache = BlockCache(budget_bytes=10_000)
+    cache.put(7, "a", "encoded", 1, 10)
+    cache.put(7, "a", "decoded", 2, 10)
+    cache.put(7, "b", "decoded", 3, 10)
+    cache.put(8, "a", "decoded", 4, 10)
+    assert cache.invalidate_container(7) == 3
+    assert cache.get(8, "a", "decoded") == 4
+    assert cache.stats.bytes_in_use == 10
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: warm results bit-identical, invalidation end to end
+# ---------------------------------------------------------------------------
+
+Q_AGG = Query("sales", predicate=col("date") < 1500, group_by="cid",
+              aggs=(("s", "price", "sum"), ("c", "cid", "count"),
+                    ("m", "price", "max")))
+Q_SEL = Query("sales", columns=("sale_id", "date"),
+              predicate=col("date") >= 2000)
+
+
+def _assert_same(a, b):
+    assert sorted(a) == sorted(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_warm_results_bit_identical(sales_db):
+    db, _ = sales_db
+    for q in (Q_AGG, Q_SEL):
+        cold, st_cold = execute(db, q)
+        warm, st_warm = execute(db, q)
+        _assert_same(cold, warm)
+        # the warm run must be served from device-resident blocks
+        assert st_warm.block_cache_misses == 0
+        assert st_warm.block_cache_hits > 0
+    # and the aggregate query's fused program came from the plan cache
+    _, st3 = execute(db, Q_AGG)
+    assert st3.fused and st3.plan_cache == "hit"
+
+
+def test_insert_commit_serves_fresh_results(sales_db):
+    db, data = sales_db
+    before, _ = execute(db, Q_AGG)
+    t = db.begin()
+    db.insert(t, "sales", {
+        "sale_id": np.arange(10**6, 10**6 + 50),
+        "cid": np.full(50, 3, np.int64),
+        "date": np.full(50, 100, np.int64),       # passes date < 1500
+        "price": np.full(50, 10.0)})
+    db.commit(t)
+    after, _ = execute(db, Q_AGG)
+    i = int(np.flatnonzero(after["cid"] == 3)[0])
+    j = int(np.flatnonzero(before["cid"] == 3)[0])
+    assert after["c"][i] == before["c"][j] + 50
+    # warm re-run agrees (WOS rows force the general path; still cached ROS)
+    again, _ = execute(db, Q_AGG)
+    _assert_same(after, again)
+    # moveout drains the WOS; new containers, fresh + correct again
+    db.run_tuple_mover(force_moveout=True)
+    moved, _ = execute(db, Q_AGG)
+    i2 = int(np.flatnonzero(moved["cid"] == 3)[0])
+    assert moved["c"][i2] == before["c"][j] + 50
+
+
+def test_delete_invalidates_and_serves_fresh(sales_db):
+    db, data = sales_db
+    before, _ = execute(db, Q_AGG)
+    epoch_before = db.epochs.latest_queryable()
+    # containers now cached; delete every row of cid 5 with date < 1500
+    cached_cids = {k[0] for k in db.block_cache.keys()}
+    t = db.begin()
+    db.delete(t, "sales", lambda r: (r["cid"] == 5) & (r["date"] < 1500))
+    db.commit(t)
+    # the touched containers' entries were evicted eagerly
+    touched = set()
+    for node in db.nodes:
+        for store in node.stores.values():
+            touched |= set(store.delete_vectors.keys())
+    assert touched & cached_cids
+    for k in db.block_cache.keys():
+        assert k[0] not in touched, f"stale entry {k} after delete"
+    after, _ = execute(db, Q_AGG)
+    assert 5 not in after["cid"]
+    again, st = execute(db, Q_AGG)
+    _assert_same(after, again)
+    # historical read still sees the deleted rows (epoch-keyed validity)
+    hist, _ = execute(db, Q_AGG, as_of=epoch_before)
+    _assert_same(before, hist)
+
+
+def test_mergeout_invalidates_retired_containers(sales_db):
+    db, data = sales_db
+    before, _ = execute(db, Q_AGG)           # populate the cache
+    cached_before = {k[0] for k in db.block_cache.keys()}
+    assert cached_before
+    # second wave of rows -> moveout makes same-stratum siblings ->
+    # mergeout retires the cached originals
+    t = db.begin()
+    db.insert(t, "sales", {
+        "sale_id": np.arange(2 * 10**6, 2 * 10**6 + 300),
+        "cid": np.full(300, 7, np.int64),
+        "date": np.full(300, 42, np.int64),   # passes date < 1500
+        "price": np.full(300, 5.0)})
+    db.commit(t)
+    stats = db.run_tuple_mover(force_moveout=True)
+    assert stats["mergeouts"] > 0
+    live = {c.id for node in db.nodes for store in node.stores.values()
+            for c in store.containers}
+    # every cached key now refers to a LIVE container only
+    for k in db.block_cache.keys():
+        assert k[0] in live, f"stale cache entry {k}"
+    assert cached_before - live, "mergeout retired cached containers"
+    after, _ = execute(db, Q_AGG)
+    i = int(np.flatnonzero(after["cid"] == 7)[0])
+    old = (np.flatnonzero(before["cid"] == 7), before["c"])
+    old_count = int(old[1][old[0][0]]) if old[0].size else 0
+    assert after["c"][i] == old_count + 300
+    warm, st = execute(db, Q_AGG)
+    _assert_same(after, warm)
+    assert st.block_cache_misses == 0
+
+
+def test_small_budget_still_correct(sales_db):
+    db, _ = sales_db
+    db.block_cache.budget_bytes = 16_384     # far below the working set
+    cold, _ = execute(db, Q_AGG)
+    warm, st = execute(db, Q_AGG)
+    _assert_same(cold, warm)
+    assert db.block_cache.stats.bytes_in_use <= 16_384
+    assert db.block_cache.stats.evictions > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: deleted-row masking across the padded tail block
+# ---------------------------------------------------------------------------
+
+def test_scan_container_tail_block_delete_mask():
+    schema = TableSchema("t", (ColumnDef("a"), ColumnDef("b")))
+    proj = super_projection(schema, ("a",), ())
+    n, br = 150, 64                       # 3 blocks; tail holds 22 rows
+    a = np.arange(n, dtype=np.int64)
+    b = (a * 3) % 17
+    cont = ROSContainer.build(
+        proj, {"a": a, "b": b}, np.ones(n, np.int64),
+        sql_types={"a": SQLType.INT, "b": SQLType.INT},
+        presorted=True, block_rows=br)
+    deleted = np.zeros(n, bool)
+    deleted[[5, 70, 149]] = True          # head, middle, last tail row
+    r = ops.scan_container(cont, ["a", "b"], deleted=deleted)
+    valid = np.asarray(r.valid)
+    vals = np.asarray(r.columns["a"])
+    assert valid.shape[0] == 3 * br       # padded shape
+    assert int(valid.sum()) == n - 3      # tail padding AND deletes masked
+    np.testing.assert_array_equal(np.sort(vals[valid]),
+                                  np.delete(a, [5, 70, 149]))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: prepass avg from combined sum/count partials
+# ---------------------------------------------------------------------------
+
+def test_groupby_prepass_avg_matches_dense():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    n, domain = 1000, 13
+    keys = jnp.asarray(rng.integers(0, domain, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    vals = {"v": jnp.asarray(rng.normal(size=n), jnp.float32)}
+    aggs = (("avg_v", "v", "avg"), ("sum_v", "v", "sum"))
+    got = ops.groupby_prepass(keys, valid, vals, domain, aggs, block=128)
+    want = ops.groupby_dense(keys, valid, vals, domain, aggs)
+    for k in ("avg_v", "sum_v", "group_count"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-5)

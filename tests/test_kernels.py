@@ -22,6 +22,33 @@ def test_rle_filter_agg(nb, R, dtype):
     np.testing.assert_allclose(got, want, rtol=1e-5)
 
 
+@pytest.mark.parametrize("nb,R,domain", [(1, 128, 16), (4, 130, 64),
+                                         (2, 384, 1000), (3, 40, 7)])
+@pytest.mark.parametrize("bounded", [True, False])
+def test_rle_grouped_agg(nb, R, domain, bounded):
+    # keys partly OUT of [0, domain): must be dropped, not clipped in
+    rv = jnp.asarray(RNG.integers(0, domain + 3, (nb, R)), jnp.int32)
+    rl = jnp.asarray(RNG.integers(0, 20, (nb, R)), jnp.int32)
+    val = jnp.asarray(RNG.normal(size=(nb, R)), jnp.float32)
+    lo, hi = (2.0, float(domain)) if bounded else (-3.0e38, 3.0e38)
+    got = ops.rle_grouped_agg(rv, rl, val, domain=domain, lo=lo, hi=hi)
+    want = ref.rle_grouped_agg_ref(rv, rl, val, domain, lo, hi)
+    assert got.shape == (4, domain)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rle_grouped_agg_default_values_is_key():
+    rv = jnp.asarray(RNG.integers(0, 8, (2, 128)), jnp.int32)
+    rl = jnp.asarray(RNG.integers(0, 5, (2, 128)), jnp.int32)
+    got = ops.rle_grouped_agg(rv, rl, domain=8)
+    want = ref.rle_grouped_agg_ref(rv, rl, rv, 8, -3.0e38, 3.0e38)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # count of key k == total run length with that key
+    flat_rv, flat_rl = np.asarray(rv).ravel(), np.asarray(rl).ravel()
+    for k in range(8):
+        assert got[0, k] == flat_rl[flat_rv == k].sum()
+
+
 @pytest.mark.parametrize("nb,B,domain", [(1, 128, 16), (4, 256, 64),
                                          (2, 512, 128), (3, 128, 1000)])
 def test_onehot_groupby(nb, B, domain):
