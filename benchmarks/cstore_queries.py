@@ -13,6 +13,11 @@ hardware --
 The paper's claim is ~2x total (Vertica 9.6s vs C-Store 18.7s) plus ~2x
 disk (949MB vs 1987MB); we report our two modes in the same table shape.
 
+Queries are authored through the fluent builder (engine/builder.py) and
+lowered to the logical-plan IR once; the harness additionally times the
+front-end itself (builder lowering + planning) per query so the API
+layer's overhead is tracked PR-over-PR in BENCH_cstore.json.
+
 Query set (reconstructed from the C-Store paper's workload structure:
 date-filtered counts/aggregates, groupbys, and fact-dim joins):
   Q1 count where shipdate = D
@@ -41,7 +46,7 @@ from repro.core import (ColumnDef, Encoding, SQLType,  # noqa: E402
                         TableSchema, VerticaDB)
 from repro.core.projection import super_projection  # noqa: E402
 from repro.data.synth import star_schema  # noqa: E402
-from repro.engine import JoinSpec, Query, col, execute  # noqa: E402
+from repro.engine import LogicalQuery, col, execute  # noqa: E402
 
 N_FACT = 2_000_000
 N_DIM = 50_000
@@ -77,35 +82,32 @@ def build_db(n_fact=N_FACT, n_dim=N_DIM) -> VerticaDB:
     return db
 
 
-QUERIES = {
-    "Q1": Query("lineitem", predicate=col("l_shipdate") == 180,
-                aggs=(("c", "l_shipdate", "count"),)),
-    "Q2": Query("lineitem", predicate=col("l_shipdate") == 180,
-                group_by="l_suppkey", aggs=(("c", "l_suppkey", "count"),)),
-    "Q3": Query("lineitem",
-                predicate=(col("l_shipdate") > 60) &
-                (col("l_shipdate") < 120),
-                group_by="l_suppkey", aggs=(("s", "l_qty", "sum"),)),
-    "Q4": Query("lineitem", group_by="l_shipdate",
-                aggs=(("c", "l_shipdate", "count"),)),
-    "Q5": Query("lineitem",
-                join=JoinSpec("orders", "l_orderkey", "o_orderkey",
-                              dim_columns=("o_custkey",),
-                              dim_predicate=col("o_orderdate") < 60),
-                group_by="o_custkey",
-                aggs=(("s", "l_extprice", "sum"),)),
-    "Q6": Query("lineitem", predicate=col("l_shipdate") > 300,
-                group_by="l_suppkey",
-                aggs=(("a", "l_extprice", "avg"),)),
-    "Q7": Query("lineitem", predicate=col("l_suppkey") < 10,
-                join=JoinSpec("orders", "l_orderkey", "o_orderkey",
-                              dim_columns=("o_custkey",)),
-                group_by="o_custkey",
-                aggs=(("c", "o_custkey", "count"),)),
-}
+def make_builders(db: VerticaDB) -> Dict[str, object]:
+    """The 7-query workload, authored with the fluent front-end."""
+    li = db.query("lineitem")
+    return {
+        "Q1": li.where(col("l_shipdate") == 180)
+                .agg(c=("*", "count")),
+        "Q2": li.where(col("l_shipdate") == 180)
+                .group_by("l_suppkey").agg(c=("*", "count")),
+        "Q3": li.where((col("l_shipdate") > 60) & (col("l_shipdate") < 120))
+                .group_by("l_suppkey").agg(s=("l_qty", "sum")),
+        "Q4": li.group_by("l_shipdate").agg(c=("*", "count")),
+        "Q5": li.join("orders", on=("l_orderkey", "o_orderkey"),
+                      cols=("o_custkey",),
+                      where=col("o_orderdate") < 60)
+                .group_by("o_custkey").agg(s=("l_extprice", "sum")),
+        "Q6": li.where(col("l_shipdate") > 300)
+                .group_by("l_suppkey").agg(a=("l_extprice", "avg")),
+        "Q7": li.where(col("l_suppkey") < 10)
+                .join("orders", on=("l_orderkey", "o_orderkey"),
+                      cols=("o_custkey",))
+                .group_by("o_custkey").agg(c=("*", "count")),
+    }
 
 
-def run_baseline(db: VerticaDB, q: Query, raw: Dict[str, jnp.ndarray]):
+def run_baseline(db: VerticaDB, q: LogicalQuery,
+                 raw: Dict[str, jnp.ndarray]):
     """C-Store-prototype-era execution: full uncompressed scans, no
     pruning/SIP; sort-based groupby. Same device (jnp), same results."""
     from repro.engine import operators as ops
@@ -113,21 +115,24 @@ def run_baseline(db: VerticaDB, q: Query, raw: Dict[str, jnp.ndarray]):
     if q.predicate is not None:
         valid = valid & jnp.asarray(q.predicate(raw), bool)
     cols = dict(raw)
-    if q.join is not None:
-        dim = db.read_table(q.join.dim_table)
-        if q.join.dim_predicate is not None:
-            m = np.asarray(q.join.dim_predicate(dim), bool)
+    for spec in q.joins:
+        dim = db.read_table(spec.dim_table)
+        if spec.dim_predicate is not None:
+            m = np.asarray(spec.dim_predicate(dim), bool)
             dim = {c: v[m] for c, v in dim.items()}
         build = {c: jnp.asarray(dim[c])
-                 for c in (q.join.dim_key,) + tuple(q.join.dim_columns)}
-        cols, valid = ops.hash_join(build, q.join.dim_key, cols,
-                                    q.join.fact_key, valid)
+                 for c in (spec.dim_key,) + tuple(spec.dim_columns)}
+        cols, valid = ops.hash_join(build, spec.dim_key, cols,
+                                    spec.fact_key, valid, how=spec.how)
     aggs = tuple(q.aggs)
-    values = {c: cols[c] for _, c, kind in aggs if kind != "count"}
-    if q.group_by is None:
+    values = {c: cols[c] for _, c, kind in aggs
+              if kind != "count" and c != "*"}
+    if not q.group_by:
         keys = jnp.zeros(valid.shape[0], jnp.int32)
         return ops.groupby_dense(keys, valid, values, 1, aggs)
-    return ops.groupby_sort(cols[q.group_by], valid, values, 1 << 16, aggs)
+    assert len(q.group_by) == 1, "baseline models the 1-key prototype"
+    return ops.groupby_sort(cols[q.group_by[0]], valid, values,
+                            1 << 16, aggs)
 
 
 def _time(fn, reps=3):
@@ -142,12 +147,26 @@ def _time(fn, reps=3):
 
 
 def run(report):
+    from repro.planner import plan_query
+
     n_fact = QUICK_N_FACT if _quick() else N_FACT
     n_dim = QUICK_N_DIM if _quick() else N_DIM
     db = build_db(n_fact, n_dim)
     raw_np = db.read_table("lineitem")
     raw = {k: jnp.asarray(v) for k, v in raw_np.items()}
     rep = db.storage_report()["lineitem_super"]
+
+    builders = make_builders(db)
+    QUERIES = {name: qb.to_ir() for name, qb in builders.items()}
+
+    # --- front-end overhead: builder lowering + planning, standalone ---
+    frontend = {}
+    for name, qb in builders.items():
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            plan_query(db, qb.to_ir())
+        frontend[name] = (time.time() - t0) / reps
 
     # --- cold pass: first-ever run of each query (upload + decode +
     # trace/compile + execute), empty block & plan caches ---
@@ -165,13 +184,14 @@ def run(report):
              "Q4": (2090, 280), "Q5": (310, 93), "Q6": (8500, 4143),
              "Q7": (2540, 161)}
     rows = {}
-    tot_v = tot_b = tot_cold = 0.0
+    tot_v = tot_b = tot_cold = tot_fe = 0.0
     for name, q in QUERIES.items():
         tv = _time(lambda q=q: execute(db, q)[0])
         tb = _time(lambda q=q: run_baseline(db, q, raw))
         out_v, stats = execute(db, q)
         rows[name] = {"vertica_ms": tv * 1e3, "baseline_ms": tb * 1e3,
                       "cold_ms": cold[name] * 1e3,
+                      "frontend_ms": frontend[name] * 1e3,
                       "warm_over_cold": tv / cold[name],
                       "speedup": tb / tv,
                       "plan": {"projection": stats.projection,
@@ -187,8 +207,10 @@ def run(report):
         tot_v += tv
         tot_b += tb
         tot_cold += cold[name]
+        tot_fe += frontend[name]
         print(f"[cstore] {name}: cold {cold[name]*1e3:8.1f}ms  "
               f"warm {tv*1e3:8.1f}ms  baseline {tb*1e3:8.1f}ms  "
+              f"frontend {frontend[name]*1e3:6.2f}ms  "
               f"speedup {tb/tv:5.2f}x  cache "
               f"{stats.block_cache_hits}h/{stats.block_cache_misses}m  "
               f"pruned {stats.blocks_pruned}/{stats.blocks_total}")
@@ -196,6 +218,7 @@ def run(report):
         "n_fact": n_fact, "quick": _quick(), "queries": rows,
         "total_vertica_s": tot_v, "total_baseline_s": tot_b,
         "total_cold_s": tot_cold, "total_warm_s": tot_v,
+        "total_frontend_s": tot_fe,
         "warm_speedup_vs_cold": tot_cold / tot_v,
         "total_speedup": tot_b / tot_v,
         "disk_encoded_mb": rep["stored_bytes"] / 1e6,
@@ -207,7 +230,8 @@ def run(report):
     }
     print(f"[cstore] TOTAL: cold {tot_cold:.2f}s warm {tot_v:.2f}s "
           f"(warm {tot_cold/tot_v:.1f}x faster) baseline {tot_b:.2f}s "
-          f"speedup {tot_b/tot_v:.2f}x (paper: 1.95x); disk "
+          f"speedup {tot_b/tot_v:.2f}x (paper: 1.95x); frontend "
+          f"{tot_fe*1e3:.1f}ms total; disk "
           f"{rep['stored_bytes']/1e6:.0f}MB vs raw "
           f"{rep['raw_bytes']/1e6:.0f}MB = {rep['ratio']:.1f}x "
           f"(paper: 2.1x)")

@@ -19,7 +19,7 @@ from repro.core import (ColumnDef, SQLType, SegmentationSpec,  # noqa: E402
                         TableSchema, VerticaDB)
 from repro.core.projection import ProjectionDef  # noqa: E402
 from repro.data.synth import star_schema  # noqa: E402
-from repro.engine import JoinSpec, Query, col  # noqa: E402
+from repro.engine import LogicalJoin, LogicalQuery, col  # noqa: E402
 from repro.engine.exchange import resegment  # noqa: E402
 from repro.planner import plan_query  # noqa: E402
 from repro.launch.mesh import make_host_mesh  # noqa: E402
@@ -47,10 +47,11 @@ def _db_variant(seg_dim_replicated: bool, fact_seg_on_key: bool):
 
 
 def run(report):
-    q = Query("lineitem",
-              join=JoinSpec("orders", "l_orderkey", "o_orderkey",
-                            dim_columns=("o_custkey",)),
-              group_by="o_custkey", aggs=(("c", "o_custkey", "count"),))
+    q = LogicalQuery(
+        "lineitem",
+        joins=(LogicalJoin("orders", "l_orderkey", "o_orderkey",
+                           dim_columns=("o_custkey",)),),
+        group_by=("o_custkey",), aggs=(("c", "*", "count"),))
     decisions = {}
     expected = {"replicated_dim": "co-located",
                 "segmented_dim_fact_on_key": "co-located",

@@ -68,7 +68,10 @@ def main() -> None:
         bench = {k: t3.get(k) for k in (
             "n_fact", "quick", "total_vertica_s", "total_baseline_s",
             "total_speedup", "total_cold_s", "total_warm_s",
-            "warm_speedup_vs_cold", "disk_ratio")}
+            "warm_speedup_vs_cold", "total_frontend_s", "disk_ratio")}
+        bench["frontend_ms_per_query"] = {
+            name: row.get("frontend_ms")
+            for name, row in t3.get("queries", {}).items()}
         (ROOT / "BENCH_cstore.json").write_text(
             json.dumps(bench, indent=1) + "\n")
         print(f"[run] wrote {ROOT/'BENCH_cstore.json'}")

@@ -1,6 +1,8 @@
 """The paper-native end-to-end scenario: continuous ingest (WOS -> tuple
 mover) while serving batched analytic queries, with a mid-run node failure
-and online recovery -- §4/§5 of the paper in one script.
+and online recovery -- §4/§5 of the paper in one script.  Queries go
+through the fluent builder (engine/builder.py), which lowers to the
+logical-plan IR shared by planner and executor.
 
 Run: PYTHONPATH=src python examples/analytics_pipeline.py
 """
@@ -10,7 +12,7 @@ import numpy as np
 
 from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
 from repro.core.recovery import recover_node
-from repro.engine import Query, col, execute
+from repro.engine import col
 
 rng = np.random.default_rng(1)
 db = VerticaDB(n_nodes=4, k_safety=1, block_rows=2048)
@@ -20,11 +22,14 @@ db.create_table(
                             ColumnDef("value", SQLType.FLOAT))),
     sort_order=("metric", "meter", "ts"), segment_by=("meter",))
 
-QUERIES = [
-    Query("metrics", group_by="metric", aggs=(("n", "metric", "count"),)),
-    Query("metrics", predicate=col("metric") == 3,
-          aggs=(("n", "metric", "count"), ("avg", "value", "avg"))),
-]
+# builder pipelines are reusable templates: build once, collect per wave
+q_counts = db.query("metrics").group_by("metric").agg(n=("*", "count"))
+q_metric3 = (db.query("metrics").where(col("metric") == 3)
+             .agg(n=("*", "count"), avg=("value", "avg")))
+q_per_meter = (db.query("metrics")
+               .group_by("metric", "meter")
+               .agg(n=("*", "count"), total=("value", "sum"))
+               .order_by("-total").limit(3))
 
 total = 0
 for wave in range(8):
@@ -40,13 +45,15 @@ for wave in range(8):
     total += k
     stats = db.run_tuple_mover(force_moveout=(wave % 2 == 1))
     # serve queries concurrently with the load
-    out, st = execute(db, QUERIES[0])
+    out = q_counts.collect()
+    st = q_counts.stats
     assert out["n"].sum() == total
     rep = db.storage_report()["metrics_super"]
     print(f"wave {wave}: {total:,} rows | containers "
           f"{rep['containers']:3d} | moveouts {stats['moveouts']} "
           f"mergeouts {stats['mergeouts']} | compression "
-          f"{rep['ratio']:.1f}x | q0 {st.wall_s*1e3:.0f}ms")
+          f"{rep['ratio']:.1f}x | q0 {st.wall_s*1e3:.0f}ms "
+          f"(plan_cache={st.plan_cache or 'n/a'})")
     if wave == 4:
         print(">>> failing node 1 mid-ingest")
         db.fail_node(1)
@@ -55,5 +62,9 @@ for wave in range(8):
         print(f">>> node 1 recovered; replayed "
               f"{sum(replayed.values()):,} rows from buddies")
 
-out, _ = execute(db, QUERIES[1])
+out = q_metric3.collect()
 print(f"final: metric=3 count {out['n'][0]:,}, avg {out['avg'][0]:.2f}")
+hot = q_per_meter.collect()
+print("hottest (metric, meter) by total value:",
+      [(int(m), int(mt), round(float(v))) for m, mt, v in
+       zip(hot["metric"], hot["meter"], hot["total"])])

@@ -1,6 +1,7 @@
 """Quickstart: the Vertica-in-JAX analytic core in ~60 lines.
 
 Creates a 4-node cluster, loads a small star schema, and runs queries
+through the fluent builder front-end (engine/builder.py -> logical IR),
 showing projections, encodings, SMA pruning, snapshot isolation and
 K-safety. Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +9,7 @@ import numpy as np
 
 from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
 from repro.core.recovery import recover_node
-from repro.engine import JoinSpec, Query, col, execute
+from repro.engine import col
 
 rng = np.random.default_rng(0)
 db = VerticaDB(n_nodes=4, k_safety=1, block_rows=1024)
@@ -19,6 +20,10 @@ db.create_table(
                           ColumnDef("price", SQLType.FLOAT))),
     sort_order=("date",), segment_by=("sale_id",),
     partition_by=("date", "div_1000"))
+db.create_table(
+    TableSchema("customers", (ColumnDef("cust_id"),
+                              ColumnDef("segment"))),
+    sort_order=("cust_id",), segment_by=())
 
 n = 100_000
 t = db.begin(direct_to_ros=True)
@@ -26,19 +31,41 @@ db.insert(t, "sales", {
     "sale_id": np.arange(n), "cid": rng.integers(0, 500, n),
     "date": np.sort(rng.integers(0, 3000, n)),
     "price": np.round(rng.normal(100, 15, n), 2)})
+db.insert(t, "customers", {
+    "cust_id": np.arange(500), "segment": rng.integers(0, 4, 500)})
 epoch = db.commit(t)
 rep = db.storage_report()["sales_super"]
 print(f"loaded {n:,} rows -> {rep['containers']} ROS containers, "
       f"compression {rep['ratio']:.1f}x (plus a K-safe buddy projection)")
 
 # filtered aggregate: the scan prunes blocks via per-block min/max (SMA)
-q = Query("sales", predicate=(col("date") >= 1000) & (col("date") < 1100),
-          group_by="cid", aggs=(("n", "cid", "count"),
-                                ("total", "price", "sum")))
-out, stats = execute(db, q)
+q = (db.query("sales")
+     .where((col("date") >= 1000) & (col("date") < 1100))
+     .group_by("cid")
+     .agg(n=("*", "count"), total=("price", "sum")))
+out = q.collect()
+stats = q.stats
 print(f"query: {len(out['cid'])} groups; pruned "
       f"{stats.blocks_pruned}/{stats.blocks_total} blocks; "
       f"groupby={stats.groupby_algorithm}; {stats.wall_s*1e3:.1f}ms")
+
+# multi-join, multi-column GROUP BY with HAVING/ORDER/LIMIT: the logical
+# IR carries a list of joins and a tuple of group keys
+top = (db.query("sales")
+       .where(col("date") < 1500)
+       .join("customers", on=("cid", "cust_id"), cols=("segment",))
+       .group_by("segment", "cid")
+       .agg(revenue=("price", "sum"), n=("*", "count"))
+       .having(col("n") > 20)
+       .order_by("-revenue")
+       .limit(5))
+res = top.collect()
+print("top (segment, cid) by revenue:",
+      [(int(s), int(c), round(float(r))) for s, c, r in
+       zip(res["segment"], res["cid"], res["revenue"])])
+res = top.collect()   # repeat: the fused program is plan-cached
+print(f"repeat run: plan_cache={top.stats.plan_cache} "
+      f"({top.stats.wall_s*1e3:.1f}ms)")
 
 # MVCC: deletes never block readers; old snapshots stay queryable
 t = db.begin()
@@ -49,9 +76,9 @@ before = len(db.read_table("sales", as_of=e2 - 1)["cid"])
 print(f"after delete: {now:,} rows; snapshot@{e2-1}: {before:,} rows")
 
 # K-safety: take a node down; queries route through buddy projections
-ref, _ = execute(db, q)     # post-delete reference
+ref = q.collect()            # post-delete reference
 db.fail_node(2)
-out2, _ = execute(db, q)
+out2 = q.collect()
 assert np.array_equal(np.sort(ref["cid"]), np.sort(out2["cid"]))
 print("node 2 down: identical results via buddy projection")
 recover_node(db, 2)

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Fast verification gate: tier-1 fast subset + quick cstore benchmark with
+# a perf-regression check against the committed BENCH_cstore.json.
+#
+# Usage: scripts/verify.sh            (from the repo root)
+#
+# Fails when (a) any fast-subset test fails, (b) the benchmark errors, or
+# (c) the quick-mode warm total regresses > REGRESSION_TOLERANCE x over
+# the previous quick-mode BENCH_cstore.json (same n_fact only).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+TOL="${REGRESSION_TOLERANCE:-1.6}"
+
+echo "== tier-1 fast subset =="
+python -m pytest -q -x -p no:cacheprovider \
+    tests/test_engine.py \
+    tests/test_logical_frontend.py \
+    tests/test_block_cache.py \
+    tests/test_encodings.py \
+    tests/test_segmentation_sma.py \
+    tests/test_locks.py
+
+echo "== quick cstore benchmark =="
+PREV=""
+if [ -f BENCH_cstore.json ]; then
+    PREV=$(mktemp)
+    cp BENCH_cstore.json "$PREV"
+fi
+python -m benchmarks.run --quick cstore_queries
+
+python - "$PREV" "$TOL" <<'EOF'
+import json
+import shutil
+import sys
+
+prev_path, tol = sys.argv[1], float(sys.argv[2])
+cur = json.load(open("BENCH_cstore.json"))
+print(f"[verify] warm total {cur['total_warm_s']:.3f}s, "
+      f"frontend {cur.get('total_frontend_s', 0)*1e3:.1f}ms, "
+      f"speedup vs baseline {cur['total_speedup']:.2f}x")
+if not prev_path:
+    print("[verify] no previous BENCH_cstore.json; quick baseline kept")
+    sys.exit(0)
+# verify.sh is a GATE, not a record-writer: restore the tracked bench
+# file (the full benchmarks.run is the explicit way to update it); the
+# quick numbers stay in results/bench/results.json
+prev = json.load(open(prev_path))
+shutil.copy(prev_path, "BENCH_cstore.json")
+if not (prev.get("quick") and cur.get("quick")
+        and prev.get("n_fact") == cur.get("n_fact")):
+    print("[verify] previous bench not comparable (size/mode); skipping "
+          "regression check")
+    sys.exit(0)
+ratio = cur["total_warm_s"] / max(prev["total_warm_s"], 1e-9)
+print(f"[verify] warm total vs previous: {ratio:.2f}x "
+      f"(tolerance {tol:.2f}x)")
+if ratio > tol:
+    sys.exit(f"[verify] PERF REGRESSION: warm total {ratio:.2f}x slower "
+             f"than previous run (> {tol:.2f}x)")
+EOF
+echo "== verify OK =="

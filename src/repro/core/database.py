@@ -115,6 +115,18 @@ class VerticaDB:
             node.stores[proj.name] = ProjectionStore(
                 proj, WOS(proj.name), cache=self.block_cache)
 
+    # ----------------------------------------------------------- query --
+
+    def query(self, table: str):
+        """Fluent relational front-end (engine/builder.py):
+        ``db.query("fact").where(...).join(...).group_by(...).agg(...)
+        .collect()``.  Lowers to the logical-plan IR consumed by planner
+        and executor."""
+        if table not in self.catalog.tables:
+            raise KeyError(f"unknown table {table!r}")
+        from ..engine.builder import QueryBuilder
+        return QueryBuilder(self, table)
+
     # ------------------------------------------------------------- txn --
 
     def begin(self, *, direct_to_ros: bool = False) -> Txn:
@@ -421,6 +433,9 @@ class VerticaDB:
                     store.invalidate_cached([c.id for c in drop])
                     for c in drop:
                         store.delete_vectors.pop(c.id, None)
+            # dropping containers bypasses MVCC: cached join build sides
+            # of this table (engine/executor.py) are stale at EVERY epoch
+            self.block_cache.invalidate_container(f"dim:{table}")
         finally:
             self.locks.release_all("ddl")
 

@@ -1,6 +1,11 @@
+from .builder import QueryBuilder
 from .executor import PLAN_CACHE, PlanCache
 from .expr import Col, Expr, Lit, col, lit
+from .logical import (Aggregate, Filter, Join, Limit, LogicalJoin,
+                      LogicalQuery, Project, Scan, Sort, as_ir, lower)
 from .pipeline import ExecStats, JoinSpec, Query, execute
 
-__all__ = ["Col", "ExecStats", "Expr", "JoinSpec", "Lit", "PLAN_CACHE",
-           "PlanCache", "Query", "col", "execute", "lit"]
+__all__ = ["Aggregate", "Col", "ExecStats", "Expr", "Filter", "Join",
+           "JoinSpec", "Limit", "Lit", "LogicalJoin", "LogicalQuery",
+           "PLAN_CACHE", "PlanCache", "Project", "Query", "QueryBuilder",
+           "Scan", "Sort", "as_ir", "col", "execute", "lit", "lower"]

@@ -19,11 +19,13 @@ Warm path, three pieces:
      containers are gathered from the cache and concatenated into one
      flat array per column -- a single device program regardless of how
      fragmented the ROS is.
-  3. **Plan cache**: the fused predicate->mask->groupby program is built
-     once per *plan signature* (projection, predicate structure+literals,
-     groupby algorithm, agg set, block shape) and memoized; the second
-     occurrence of any query shape skips closure construction and hits
-     jax's compile cache instead of re-tracing.
+  3. **Plan cache**: the fused join-chain->derived->predicate->mask->
+     groupby program is built once per *plan signature* -- the logical
+     IR's canonical ``LogicalQuery.signature()`` (engine/logical.py)
+     plus the physical choices (projection, algorithm, static domain,
+     block shape) -- and memoized; the second occurrence of any query
+     shape skips closure construction and hits jax's compile cache
+     instead of re-tracing.
 
 See DESIGN.md §11 ("Block cache & plan cache").
 """
@@ -45,6 +47,7 @@ from . import operators as ops
 from .expr import Expr
 
 KIND_VALID = "valid"      # per-(container, as_of) visibility blocks
+KIND_BUILD = "build"      # per-(dim_table, as_of, join-sig) build sides
 
 
 # ---------------------------------------------------------------------------
@@ -59,9 +62,10 @@ class PlanCacheStats:
 
 class PlanCache:
     """Bounded memo of fused executables keyed by plan signature.  The
-    signature captures everything that changes the traced program --
-    projection, predicate shape *and* literals, groupby algorithm and
-    domain, agg set, and the column set -- so a hit is exactly 'this query
+    signature is the IR's canonical form plus the physical choices, so it
+    captures everything that changes the traced program -- joins, derived
+    expressions, predicate shape *and* literals, group keys, groupby
+    algorithm and domain, agg set -- and a hit is exactly 'this query
     shape has run before'."""
 
     def __init__(self, max_entries: int = 256):
@@ -90,6 +94,11 @@ class PlanCache:
 # one process-wide plan cache: plans are keyed by projection name and
 # query shape, not by DB identity, and jitted programs are shareable
 PLAN_CACHE = PlanCache()
+
+# negative cache: plan signatures whose sort-path GroupBy overflowed
+# max_groups -- repeats skip the doomed fused attempt and go straight to
+# the general pipeline (which lands on the exact host GroupBy)
+_SORT_OVERFLOWED: set = set()
 
 
 # ---------------------------------------------------------------------------
@@ -204,36 +213,80 @@ def scan_stores_batched(db: VerticaDB, plan, need: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
-# Fused scan -> predicate -> mask -> aggregate (single jitted program)
+# Fused scan -> joins -> predicate -> mask -> aggregate (one jitted program)
 # ---------------------------------------------------------------------------
 
 def _plan_signature(db: VerticaDB, q, plan, algo: str, domain: int,
-                    br: int) -> tuple:
-    pred_sig = q.predicate.signature() if q.predicate is not None else ""
-    return ("fused", plan.projection, pred_sig, q.group_by, algo,
-            int(domain), tuple(q.aggs), br)
+                    domains: Tuple[int, ...], br: int) -> tuple:
+    """The IR's canonical exec signature (device-program identity; HAVING/
+    ORDER BY/LIMIT shape host-side and are excluded) plus the physical
+    choices (projection, algorithm, static domain, per-key pack radices,
+    block shape).  Two distinct logical programs therefore can never
+    collide, and a repeated query shape always hits.  The radices must be
+    part of the key: the closure bakes them into pack_keys, so SMA-domain
+    growth after new commits has to miss."""
+    return ("fused", plan.projection, q.exec_signature(), algo,
+            int(domain), tuple(domains), br)
 
 
-def _build_fused(predicate: Optional[Expr], group_by: Optional[str],
-                 algo: str, domain: int,
+def build_join_sides(db: VerticaDB, q, as_of: int
+                     ) -> List[Dict[str, jax.Array]]:
+    """Build sides for the IR's join list: snapshot-read each dimension,
+    apply its dim predicate, upload key + carried columns.  Shared by the
+    fused and general pipelines, and kept device-resident in the block
+    cache keyed by (dim table, join signature, snapshot epoch) -- MVCC
+    makes a fixed-epoch read immutable, so a repeat join query skips the
+    host decode + upload entirely (drop_partition, the one non-MVCC
+    mutation, invalidates the table's entries)."""
+    cache = getattr(db, "block_cache", None)
+    builds = []
+    for spec in q.joins:
+        def make(spec=spec):
+            dim_rows = db.read_table(spec.dim_table, as_of=as_of)
+            if spec.dim_predicate is not None:
+                m = np.asarray(spec.dim_predicate(dim_rows), bool)
+                dim_rows = {c: v[m] for c, v in dim_rows.items()}
+            return {c: jnp.asarray(dim_rows[c])
+                    for c in (spec.dim_key,) + tuple(spec.dim_columns)}
+        if cache is None:
+            builds.append(make())
+        else:
+            builds.append(cache.get_or_put(
+                f"dim:{spec.dim_table}", f"{spec.signature()}@{as_of}",
+                KIND_BUILD, make, device_bytes))
+    return builds
+
+
+def _build_fused(ir, predicate: Optional[Expr], algo: str,
+                 domains: Tuple[int, ...], domain: int,
                  aggs: Tuple[Tuple[str, str, str], ...]) -> Callable:
-    """One XLA program: predicate eval, mask AND, groupby/aggregate.  The
-    expression tree is traced *inside* the jit so the whole pipeline fuses;
-    groupby_dense/groupby_sort inline (nested jit) rather than launching
-    separately."""
+    """One XLA program: hash joins (build sides passed as runtime pytree
+    args), derived projections, predicate eval, composite-key packing,
+    groupby/aggregate.  The expression trees and join chain are traced
+    *inside* the jit so the whole pipeline fuses; groupby_dense/
+    groupby_sort inline (nested jit) rather than launching separately."""
 
     values_cols = tuple(sorted({c for _, c, kind in aggs
-                                if kind != "count"}))
+                                if kind != "count" and c != "*"}))
+    group_by = ir.group_by
 
     @jax.jit
-    def fused(cols: Dict[str, jax.Array], valid: jax.Array):
+    def fused(cols: Dict[str, jax.Array], valid: jax.Array,
+              builds: Tuple[Dict[str, jax.Array], ...]):
+        cols = dict(cols)
+        for spec, build in zip(ir.joins, builds):
+            cols, valid = ops.hash_join(build, spec.dim_key, cols,
+                                        spec.fact_key, valid, how=spec.how)
+        for name, e in ir.derived:
+            cols[name] = e(cols)
         if predicate is not None:
             valid = valid & jnp.asarray(predicate(cols), bool)
         values = {c: cols[c] for c in values_cols}
-        if group_by is None:
+        if not group_by:
             keys = jnp.zeros(valid.shape[0], jnp.int32)
             return ops.groupby_dense(keys, valid, values, 1, aggs)
-        keys = cols[group_by]
+        keys = ops.pack_keys([cols[g] for g in group_by], domains) \
+            if len(group_by) > 1 else cols[group_by[0]]
         if algo == "dense":
             return ops.groupby_dense(keys.astype(jnp.int32), valid,
                                      values, domain, aggs)
@@ -250,66 +303,107 @@ def _stores_have_wos(db: VerticaDB, plan) -> bool:
 def execute_fused(db: VerticaDB, q, plan, as_of: int,
                   stats) -> Optional[Dict[str, np.ndarray]]:
     """Run an aggregate query as one cached fused program.  Returns None
-    when the query shape is outside the fused subset (join, WOS rows
-    pending, or no aggregation) -- the caller falls back to the general
-    pipeline."""
-    if q.join is not None or not (q.aggs or q.group_by is not None):
+    when the query shape is outside the fused subset (WOS rows pending,
+    no aggregation, or composite keys without static SMA domains) -- the
+    caller falls back to the general pipeline."""
+    if not (q.aggs or q.group_by):
         return None
+    if any(j.how != "inner" for j in q.joins):
+        return None   # left-join NULL groups need runtime key bounds
     if _stores_have_wos(db, plan):
         return None   # WOS rows need the unencoded side-scan
 
-    # groupby algorithm with a STATIC domain (jit-friendly): dense needs
-    # the key domain from container SMAs; unknown/oversized -> sort
+    # groupby algorithm with STATIC domains (jit-friendly): dense/packing
+    # need per-key domains from container SMAs; unknown/oversized -> sort
+    # for one key, cold path (runtime bounds) for composite keys
     algo = plan.groupby_algorithm
     if algo == "rle":
         algo = "sort"
-    domain = 1
-    if q.group_by is not None:
-        from ..planner.planner import _domain_estimate
-        dom = _domain_estimate(db, db.catalog.projections[plan.projection],
-                               q.group_by)
-        if algo == "dense" and (dom is None
-                                or dom > plan.dense_domain_limit):
-            algo = "sort"
-            stats.groupby_algorithm = "sort (runtime switch)"
-        domain = int(dom) if algo == "dense" else plan.max_groups
+    domain, domains = 1, ()
+    if q.group_by:
+        doms = plan.key_domains or (None,) * len(q.group_by)
+        if len(q.group_by) == 1:
+            dom = doms[0]
+            if algo == "dense" and (dom is None
+                                    or dom > plan.dense_domain_limit):
+                algo = "sort"
+                stats.groupby_algorithm = "sort (runtime switch)"
+            domains = (int(dom),) if dom is not None else (0,)
+            domain = int(dom) if algo == "dense" else plan.max_groups
+        else:
+            if any(d is None for d in doms):
+                return None   # composite packing needs static bounds
+            total = 1
+            for d in doms:
+                total *= int(d)
+            if total >= 1 << 31:
+                return None   # packed key would overflow device int32
+            if algo == "dense" and total > plan.dense_domain_limit:
+                algo = "sort"
+                stats.groupby_algorithm = "sort (runtime switch)"
+            domains = tuple(int(d) for d in doms)
+            domain = total if algo == "dense" else plan.max_groups
 
-    scan = scan_stores_batched(db, plan, sorted(q.needed_columns()),
-                               q.predicate, None, as_of, stats)
+    br = db.block_rows
+    sig = _plan_signature(db, q, plan, algo, domain, domains, br)
+    if sig in _SORT_OVERFLOWED:
+        return None   # known to exceed the sort cap: don't re-try
+
+    proj = db.catalog.projections[plan.projection]
+    need = sorted(q.scan_columns(proj))
+    scan_pred = q.scan_predicate(proj.columns)
+    scan = scan_stores_batched(db, plan, need, scan_pred, None, as_of,
+                               stats)
     if scan is None:
         return None   # fully pruned; pipeline builds the empty result
     stats.rows_scanned = int(scan.valid.shape[0])
 
-    br = db.block_rows
-    sig = _plan_signature(db, q, plan, algo, domain, br)
+    # build sides host-side (small dims); the dim predicate filters here,
+    # which is the SIP effect pushed all the way into the probe program
+    builds = build_join_sides(db, q, as_of)
+    if q.joins:
+        stats.sip_applied = stats.sip_applied or plan.use_sip
+
+    # the scan already masked a projection-covered predicate; only a
+    # deferred one (join/derived columns) re-evaluates inside the program
+    # (deterministic from pred+projection, both already in the signature)
+    fused_pred = q.predicate if scan_pred is None else None
     fused, hit = PLAN_CACHE.get_or_build(
-        sig, lambda: _build_fused(q.predicate, q.group_by, algo, domain,
+        sig, lambda: _build_fused(q, fused_pred, algo, domains, domain,
                                   tuple(q.aggs)))
     stats.plan_cache = "hit" if hit else "miss"
-    res = fused(scan.columns, scan.valid)
+    res = fused(scan.columns, scan.valid, tuple(builds))
 
-    # --- host-side result shaping (small outputs) ---
+    # --- host-side result shaping (small outputs); HAVING/ORDER/LIMIT
+    # are applied by pipeline._finalize, shared with the cold path ---
     aggs = tuple(q.aggs)
-    if q.group_by is None:
+    if not q.group_by:
         return {name: np.asarray(v)[:1] for name, v in res.items()}
     if algo == "dense":
         counts = np.asarray(res["group_count"])
         sel = counts > 0
-        out = {q.group_by: np.flatnonzero(sel), "group_count": counts[sel]}
+        gkeys = np.flatnonzero(sel)
+        out = {"group_count": counts[sel]}
         for name, _, _ in aggs:
             out[name] = np.asarray(res[name])[sel]
     else:
         n = int(res["n_groups"])
-        out = {q.group_by: np.asarray(res["group_keys"])[:n],
-               "group_count": np.asarray(res["group_count"])[:n]}
+        if n > domain:
+            # distinct groups exceed the sort cap: results would be
+            # silently merged -- fall back to the general pipeline
+            # (which lands on the host GroupBy) and remember the shape
+            if len(_SORT_OVERFLOWED) > 512:
+                _SORT_OVERFLOWED.clear()
+            _SORT_OVERFLOWED.add(sig)
+            stats.plan_cache = ""
+            return None
+        gkeys = np.asarray(res["group_keys"])[:n]
+        out = {"group_count": np.asarray(res["group_count"])[:n]}
         for name, _, _ in aggs:
             out[name] = np.asarray(res[name])[:n]
-    if q.order_by:
-        key = out.get(q.order_by, out.get(q.group_by))
-        order = np.argsort(key)
-        if q.descending:
-            order = order[::-1]
-        out = {c: v[order] for c, v in out.items()}
-    if q.limit:
-        out = {c: v[: q.limit] for c, v in out.items()}
+    if len(q.group_by) > 1:
+        for g, kv in zip(q.group_by, ops.unpack_keys(gkeys, domains)):
+            out[g] = kv
+    else:
+        out[q.group_by[0]] = gkeys
     return out

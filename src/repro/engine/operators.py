@@ -101,6 +101,38 @@ def concat_scans(results: List[ScanResult]) -> Optional[ScanResult]:
 # GroupBy
 # ---------------------------------------------------------------------------
 
+# Composite group-by keys (logical IR: group_by is a tuple of columns) are
+# key-packed into one dense non-negative domain -- mixed-radix, last column
+# fastest -- so every single-key path below (dense scatter, sort-based,
+# the fused executor program, and on TPU the Pallas rle_grouped_agg /
+# onehot kernels) applies unchanged to multi-column grouping.
+
+def pack_keys(key_cols: Sequence[jax.Array],
+              domains: Sequence[int],
+              lows: Optional[Sequence[int]] = None) -> jax.Array:
+    """Mix-radix pack: keys k_i in [lo_i, lo_i + d_i) -> one int key in
+    [0, prod(d_i)).  Values outside their domain are clipped (callers
+    guarantee domains via SMAs or a runtime min/max pass)."""
+    lows = lows or (0,) * len(domains)
+    packed = None
+    for k, d, lo in zip(key_cols, domains, lows):
+        k = jnp.clip(k.astype(_int_dtype()) - lo, 0, d - 1)
+        packed = k if packed is None else packed * d + k
+    return packed
+
+
+def unpack_keys(packed: np.ndarray, domains: Sequence[int],
+                lows: Optional[Sequence[int]] = None) -> List[np.ndarray]:
+    """Host-side inverse of pack_keys over the (small) group-key output."""
+    lows = lows or (0,) * len(domains)
+    packed = np.asarray(packed).astype(np.int64)
+    out: List[np.ndarray] = []
+    for d, lo in zip(reversed(domains), reversed(lows)):
+        out.append(packed % d + lo)
+        packed = packed // d
+    out.reverse()
+    return out
+
 # device dtypes: jax runs 32-bit by default; counts/sums accumulate in
 # i32/f32 on device (benchmark-scale exact for counts; sums compared with
 # tolerance), 64-bit when the caller enables jax_enable_x64.
@@ -301,6 +333,21 @@ def hash_join(build: Dict[str, jax.Array], build_key: str,
     """N:1 join: probe each fact row against the (small) build side.
     Build side is sorted once ('building the hash table'); the probe is one
     vectorized lookup. Returns (joined columns, valid mask)."""
+    if build[build_key].shape[0] == 0:
+        # empty build side (dim predicate filtered everything, or the
+        # dimension was truncated): no probe row can match
+        n = probe[probe_key].shape[0]
+        out = dict(probe)
+        for c, v in build.items():
+            if c != build_key:
+                out[c] = jnp.full((n,) + v.shape[1:], -1, v.dtype)
+        matched = jnp.zeros(n, bool)
+        if how == "inner":
+            return out, probe_valid & matched
+        if how == "left":
+            out["_matched"] = matched
+            return out, probe_valid
+        raise ValueError(how)
     order = jnp.argsort(build[build_key])
     bk = build[build_key][order]
     idx, matched = join_lookup(bk, probe[probe_key])
@@ -308,7 +355,13 @@ def hash_join(build: Dict[str, jax.Array], build_key: str,
     for c, v in build.items():
         if c == build_key:
             continue
-        out[f"{c}"] = v[order][idx]
+        joined = v[order][idx]
+        if how == "left":
+            # unmatched rows carry the NULL sentinel (-1), the engine's
+            # NULL analog, instead of an arbitrary clipped build row
+            joined = jnp.where(matched, joined,
+                               jnp.asarray(-1, joined.dtype))
+        out[f"{c}"] = joined
     if how == "inner":
         valid = probe_valid & matched
     elif how == "left":

@@ -1,13 +1,27 @@
-"""Query pipeline: logical query -> chosen plan -> execution (paper §6).
+"""Query pipeline: logical IR -> chosen plan -> execution (paper §6).
 
-A Query is the logical algebra (scan/filter/join/groupby/sort/limit); the
-planner (planner/planner.py) picks the projection, join strategy, SIP
-filters and GroupBy algorithm; this module runs the physical plan over a
-VerticaDB's live nodes and returns numpy results.
+The front-end is the logical-plan IR (engine/logical.py): ``LogicalQuery``
+carries scan/filter/a *list* of joins/derived projections/multi-column
+group-by/HAVING/multi-key sort/limit.  The planner (planner/planner.py)
+picks the projection, per-join strategy, SIP filters and the GroupBy
+algorithm; this module runs the physical plan over a VerticaDB's live
+nodes and returns numpy results.
+
+Composite group-by keys are packed into one dense integer domain
+(operators.pack_keys) so the single-key GroupBy machinery -- dense
+scatter, sort-based, the fused plan-cached executor and the Pallas
+kernels -- applies unchanged; keys unpack on the (small) output.
 
 Runtime algorithm switching (§6.1): the GroupBy starts on the planner's
 choice but falls back from dense-hash to sort-based when the observed key
-domain exceeds the table budget -- the paper's hash->sort-merge switch.
+domain exceeds the table budget -- the paper's hash->sort-merge switch --
+and to a host-side unique-based GroupBy when even packed keys would
+overflow the device integer width.
+
+DEPRECATED SHIMS: ``Query`` and ``JoinSpec`` predate the IR (one join,
+one group-by column).  They remain importable from ``repro.engine`` as
+thin constructors that lower via ``Query.to_ir()``; new code should use
+``db.query(...)`` (engine/builder.py) or LogicalQuery directly.
 """
 from __future__ import annotations
 
@@ -21,47 +35,45 @@ import numpy as np
 from ..core.database import VerticaDB
 from ..core.encodings import Encoding
 from .expr import Col, Expr
+from .logical import LogicalJoin, LogicalQuery, as_ir
 from . import executor as fused_exec
 from . import operators as ops
 from .sip import sip_filter
 
+# back-compat: JoinSpec always matched the IR's join shape field-for-field
+JoinSpec = LogicalJoin
 
-@dataclasses.dataclass(frozen=True)
-class JoinSpec:
-    dim_table: str
-    fact_key: str
-    dim_key: str
-    dim_columns: Tuple[str, ...] = ()
-    dim_predicate: Optional[Expr] = None
-    how: str = "inner"
+_PACK_LIMIT = 1 << 31   # packed keys live in device int32 by default
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Query:
+    """DEPRECATED legacy front-end (single join, single group-by column).
+    Kept as a thin shim: ``to_ir()`` lowers to the LogicalQuery consumed
+    everywhere; ``execute``/``plan_query`` accept it transparently."""
     table: str
     columns: Tuple[str, ...] = ()
     predicate: Optional[Expr] = None
-    join: Optional[JoinSpec] = None
+    join: Optional[LogicalJoin] = None
     group_by: Optional[str] = None
     aggs: Tuple[Tuple[str, str, str], ...] = ()   # (out, col, kind)
     order_by: Optional[str] = None
     descending: bool = False
     limit: Optional[int] = None
 
+    def to_ir(self) -> LogicalQuery:
+        return LogicalQuery(
+            table=self.table, columns=tuple(self.columns),
+            predicate=self.predicate,
+            joins=(self.join,) if self.join is not None else (),
+            group_by=(self.group_by,) if self.group_by else (),
+            aggs=tuple(self.aggs),
+            order_by=((self.order_by, self.descending),)
+            if self.order_by else (),
+            limit=self.limit).validate()
+
     def needed_columns(self) -> set:
-        need = set(self.columns)
-        if self.predicate is not None:
-            need |= self.predicate.columns()
-        if self.group_by:
-            need.add(self.group_by)
-        for _, c, kind in self.aggs:
-            if kind != "count":
-                need.add(c)
-        if self.join:
-            need.add(self.join.fact_key)
-        if self.order_by and self.order_by not in {a[0] for a in self.aggs}:
-            need.add(self.order_by)
-        return need
+        return self.to_ir().needed_columns()
 
 
 @dataclasses.dataclass
@@ -75,6 +87,7 @@ class ExecStats:
     rows_scanned: int = 0
     sip_applied: bool = False
     wall_s: float = 0.0
+    frontend_s: float = 0.0         # lowering + planning time
     # warm-path telemetry (engine/executor.py)
     fused: bool = False
     plan_cache: str = ""            # "hit" / "miss" / "" (not attempted)
@@ -82,22 +95,29 @@ class ExecStats:
     block_cache_misses: int = 0
 
 
-def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
+def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
             plan=None) -> Tuple[Dict[str, np.ndarray], ExecStats]:
-    """Run a query. ``plan`` (from planner.plan_query) may be supplied;
+    """Run a logical plan (LogicalQuery, node tree, builder, or the legacy
+    Query shim).  ``plan`` (from planner.plan_query) may be supplied;
     otherwise the planner is invoked."""
     from ..planner.planner import plan_query
 
     t0 = time.time()
-    plan = plan or plan_query(db, q)
+    q = as_ir(q)
+    if plan is None:
+        plan = plan_query(db, q)
+    frontend_s = time.time() - t0
     stats = ExecStats(projection=plan.projection,
                       groupby_algorithm=plan.groupby_algorithm,
-                      join_strategy=plan.join_strategy)
+                      join_strategy=plan.join_strategy,
+                      frontend_s=frontend_s)
     as_of = as_of if as_of is not None else db.epochs.latest_queryable()
     bc = db.block_cache.stats
     bc_h0, bc_m0 = bc.hits, bc.misses
 
-    def _finish(out):
+    def _finish(out, *, final: bool = True):
+        if final:
+            out = _finalize(q, out)
         stats.block_cache_hits = bc.hits - bc_h0
         stats.block_cache_misses = bc.misses - bc_m0
         stats.wall_s = time.time() - t0
@@ -111,7 +131,7 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
             return _finish(res)
 
     # --- RLE-direct fast path: aggregate on encoded data, zero decode ---
-    if plan.groupby_algorithm == "rle" and q.join is None \
+    if plan.groupby_algorithm == "rle" and not q.joins \
             and q.predicate is None:
         res = _rle_groupby(db, q, plan, as_of)
         if res is not None:
@@ -119,35 +139,32 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
         stats.groupby_algorithm = "sort (rle fallback)"
         plan = dataclasses.replace(plan, groupby_algorithm="sort")
 
-    # --- warm path: cached fused scan->predicate->aggregate program ---
+    # --- warm path: cached fused scan->join->predicate->aggregate ---
     res = fused_exec.execute_fused(db, q, plan, as_of, stats)
     if res is not None:
         stats.fused = True
         return _finish(res)
 
-    # --- build side + SIP (§6.1) ---
-    sip = None
-    build = None
-    if q.join is not None:
-        dim_rows = db.read_table(q.join.dim_table, as_of=as_of)
-        if q.join.dim_predicate is not None:
-            m = np.asarray(q.join.dim_predicate(dim_rows), bool)
-            dim_rows = {c: v[m] for c, v in dim_rows.items()}
-        build = {c: jnp.asarray(dim_rows[c])
-                 for c in (q.join.dim_key,) + tuple(q.join.dim_columns)}
-        if plan.use_sip:
-            sip = sip_filter(build[q.join.dim_key], q.join.fact_key)
+    # --- build sides + SIP (§6.1), one per join in plan order ---
+    builds = fused_exec.build_join_sides(db, q, as_of)
+    sips: List[Callable] = []
+    for ji, spec in enumerate(q.joins):
+        if plan.sip_joins and plan.sip_joins[ji]:
+            sips.append(sip_filter(builds[ji][spec.dim_key],
+                                   spec.fact_key))
             stats.sip_applied = True
+    sip = _combine_sips(sips)
 
     # --- scan (SMA pruning + predicate + SIP pushed down) ---
-    need = q.needed_columns() | ({q.join.fact_key} if q.join else set())
     proj = db.catalog.projections[plan.projection]
-    need &= set(proj.columns)
+    need = q.scan_columns(proj)
+    # predicates over join outputs / derived columns defer past the scan
+    scan_pred = q.scan_predicate(proj.columns)
     scans = []
     # ROS containers: one batched device-cached scan over every source
     # (engine/executor.py), replacing the per-container Python loop
     ros = fused_exec.scan_stores_batched(db, plan, sorted(need),
-                                         q.predicate, sip, as_of, stats)
+                                         scan_pred, sip, as_of, stats)
     if ros is not None:
         scans.append(ros)
     for host, owner in plan.sources:
@@ -161,50 +178,108 @@ def execute(db: VerticaDB, q: Query, *, as_of: Optional[int] = None,
             vis = (eps <= as_of) & ~((dels > 0) & (dels <= as_of))
             cols = {c: jnp.asarray(data[c]) for c in need}
             valid = jnp.asarray(vis)
-            if q.predicate is not None:
-                valid = valid & jnp.asarray(q.predicate(cols), bool)
+            if scan_pred is not None:
+                valid = valid & jnp.asarray(scan_pred(cols), bool)
             if sip is not None:
                 valid = valid & sip(cols)
             scans.append(ops.ScanResult(cols, valid))
     merged = ops.concat_scans(scans)
     if merged is None:
-        # fully pruned / empty: return a structured empty result
-        out = {c: np.zeros(0, np.int64) for c in q.columns}
-        if q.group_by:
-            out[q.group_by] = np.zeros(0, np.int64)
-            out["group_count"] = np.zeros(0, np.int64)
-        for name, _, kind in q.aggs:
-            out[name] = (np.zeros(1) if q.group_by is None
-                         else np.zeros(0))
-        return _finish(out)
+        return _finish(_empty_result(q))
     stats.blocks_pruned = merged.pruned_blocks
     stats.blocks_total = merged.total_blocks
     cols, valid = dict(merged.columns), merged.valid
     stats.rows_scanned = int(cols[next(iter(cols))].shape[0])
 
-    # --- join ---
-    if q.join is not None:
-        cols, valid = ops.hash_join(build, q.join.dim_key, cols,
-                                    q.join.fact_key, valid, how=q.join.how)
+    # --- joins (in plan order; later probes may use earlier outputs) ---
+    for spec, build in zip(q.joins, builds):
+        cols, valid = ops.hash_join(build, spec.dim_key, cols,
+                                    spec.fact_key, valid, how=spec.how)
 
-    # --- groupby / aggregate ---
-    if q.group_by is not None or q.aggs:
+    # --- derived projections, then any deferred predicate ---
+    for name, e in q.derived:
+        cols[name] = e(cols)
+    if scan_pred is None and q.predicate is not None:
+        valid = valid & jnp.asarray(q.predicate(cols), bool)
+
+    # --- groupby / aggregate / plain select ---
+    if q.group_by or q.aggs:
         out = _run_groupby(q, plan, cols, valid, stats)
     else:
         mask = np.asarray(valid)
+        keep = set(q.columns) | {n for n, _ in q.derived}
         out = {c: np.asarray(v)[mask] for c, v in cols.items()
-               if c in q.columns or not q.columns}
-        if q.order_by:
-            order = np.argsort(out[q.order_by])
-            if q.descending:
-                order = order[::-1]
-            out = {c: v[order] for c, v in out.items()}
-        if q.limit:
-            out = {c: v[: q.limit] for c, v in out.items()}
+               if (c in keep) or (not keep and c != "_matched")}
     return _finish(out)
 
 
-def _rle_scalar_count(db: VerticaDB, q: Query, plan, as_of: int
+# ---------------------------------------------------------------------------
+# result shaping shared by every path (incl. the fused executor)
+# ---------------------------------------------------------------------------
+
+def _finalize(q: LogicalQuery, out: Dict[str, np.ndarray]
+              ) -> Dict[str, np.ndarray]:
+    """HAVING -> ORDER BY (multi-key, per-key direction) -> LIMIT, on the
+    (small) host-side result."""
+    if q.having is not None and out:
+        n = len(next(iter(out.values())))
+        if n:
+            m = np.asarray(q.having(out), bool)
+            out = {c: np.asarray(v)[m] for c, v in out.items()}
+    if q.order_by and out:
+        n = len(next(iter(out.values())))
+        if n:
+            keys = []
+            for c, desc in reversed(q.order_by):
+                k = np.asarray(out[c])
+                if desc:
+                    # descending without precision loss: bit-complement
+                    # for ints/bools (= -k-1, never overflows), negate
+                    # floats
+                    k = ~k if k.dtype.kind in "bui" else -k
+                keys.append(k)
+            order = np.lexsort(keys)       # last key = primary
+            out = {c: np.asarray(v)[order] for c, v in out.items()}
+    if q.limit is not None:
+        out = {c: v[: q.limit] for c, v in out.items()}
+    return out
+
+
+def _empty_result(q: LogicalQuery) -> Dict[str, np.ndarray]:
+    """Structured empty output for a fully pruned / empty scan (same key
+    set as the non-empty path)."""
+    out = {c: np.zeros(0, np.int64) for c in q.columns}
+    for name, _ in q.derived:
+        out[name] = np.zeros(0)
+    for g in q.group_by:
+        out[g] = np.zeros(0, np.int64)
+    if q.group_by:
+        out["group_count"] = np.zeros(0, np.int64)
+    for name, _, kind in q.aggs:
+        out[name] = np.zeros(1) if not q.group_by else np.zeros(0)
+    return out
+
+
+def _combine_sips(sips: List[Callable]) -> Optional[Callable]:
+    if not sips:
+        return None
+    if len(sips) == 1:
+        return sips[0]
+
+    def apply(cols):
+        m = sips[0](cols)
+        for s in sips[1:]:
+            m = m & s(cols)
+        return m
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# RLE-direct paths (single-column group keys on encoded data)
+# ---------------------------------------------------------------------------
+
+def _rle_scalar_count(db: VerticaDB, q: LogicalQuery, plan, as_of: int
                       ) -> Optional[Dict[str, np.ndarray]]:
     """COUNT(*) with a range predicate on the RLE-encoded sort leader:
     sum run lengths whose value passes -- O(runs), no decode (§6.1; the
@@ -249,15 +324,16 @@ def _rle_scalar_count(db: VerticaDB, q: Query, plan, as_of: int
     return out
 
 
-def _rle_groupby(db: VerticaDB, q: Query, plan, as_of: int
+def _rle_groupby(db: VerticaDB, q: LogicalQuery, plan, as_of: int
                  ) -> Optional[Dict[str, np.ndarray]]:
     """COUNT GROUP BY key straight off RLE runs (§6.1 'operate directly on
     encoded data'). Requires no pending deletes and fully-committed
     containers; otherwise returns None and the caller decodes."""
     from ..planner.planner import _domain_estimate
 
+    group = q.group_by[0]
     proj = db.catalog.projections[plan.projection]
-    dom = _domain_estimate(db, proj, q.group_by)
+    dom = _domain_estimate(db, proj, group)
     if dom is None or dom > plan.dense_domain_limit:
         return None
     total = np.zeros(dom, np.int64)
@@ -268,78 +344,135 @@ def _rle_groupby(db: VerticaDB, q: Query, plan, as_of: int
         for c in store.containers:
             if store.delete_vectors.get(c.id) or (c.epochs > as_of).any():
                 return None
-            if c.columns[q.group_by].encoding != Encoding.RLE:
+            if c.columns[group].encoding != Encoding.RLE:
                 return None
-            counts = ops.groupby_rle(c.columns[q.group_by],
-                                     c.smas[q.group_by].counts, dom)
+            counts = ops.groupby_rle(c.columns[group],
+                                     c.smas[group].counts, dom)
             # subtract tail-block padding (pad value = last value)
             total += np.asarray(counts["group_count"])
-            pad = c.columns[q.group_by].n_blocks * \
-                c.columns[q.group_by].block_rows - c.n_rows
+            pad = c.columns[group].n_blocks * \
+                c.columns[group].block_rows - c.n_rows
             if pad and c.n_rows:
-                last = int(c.decode_column(q.group_by)[-1])
+                last = int(c.decode_column(group)[-1])
                 total[last] -= pad
     sel = total > 0
-    out = {q.group_by: np.flatnonzero(sel), "group_count": total[sel]}
+    out = {group: np.flatnonzero(sel), "group_count": total[sel]}
     for name, _, kind in q.aggs:
         if kind == "count":
             out[name] = total[sel]
     return out
 
 
-def _run_groupby(q: Query, plan, cols, valid, stats) -> Dict[str, np.ndarray]:
+# ---------------------------------------------------------------------------
+# generic GroupBy over (possibly composite) keys
+# ---------------------------------------------------------------------------
+
+def _run_groupby(q: LogicalQuery, plan, cols, valid, stats
+                 ) -> Dict[str, np.ndarray]:
     aggs = tuple(q.aggs)
-    values = {c: cols[c] for _, c, kind in aggs if kind != "count"
-              for c in [c]}
-    if q.group_by is None:
+    values = {c: cols[c] for _, c, kind in aggs
+              if kind != "count" and c != "*"}
+    if not q.group_by:
         # scalar aggregate: single group
         keys = jnp.zeros(valid.shape[0], jnp.int32)
         res = ops.groupby_dense(keys, valid, values, 1, aggs)
         return {name: np.asarray(v)[:1] for name, v in res.items()}
 
-    keys = cols[q.group_by]
-    algo = plan.groupby_algorithm
-    if algo == "rle":
-        algo = "sort"
     if not bool(valid.any()):
-        out = {q.group_by: np.zeros(0, np.int64),
-               "group_count": np.zeros(0, np.int64)}
+        out = {g: np.zeros(0, np.int64) for g in q.group_by}
+        out["group_count"] = np.zeros(0, np.int64)
         for name, _, _ in aggs:
             out[name] = np.zeros(0)
         return out
-    if algo == "dense":
-        big = int(jnp.iinfo(keys.dtype).max) if keys.dtype.kind == "i" \
-            else 2**30
-        kmin = int(jnp.where(valid, keys, big).min()) if valid.shape[0] \
-            else 0
-        kmax = int(jnp.where(valid, keys, -big).max()) if valid.shape[0] \
-            else 0
-        domain = kmax - min(kmin, 0) + 1
-        if domain > plan.dense_domain_limit:
+
+    algo = plan.groupby_algorithm
+    if algo == "rle":
+        algo = "sort"
+
+    key_cols = [cols[g] for g in q.group_by]
+    packed, lows, domains = key_cols[0], None, None
+    if len(key_cols) > 1 or algo == "dense":
+        # observed per-key bounds for packing / the dense domain (tighter
+        # than SMA estimates; one host sync each -- this is the cold
+        # path).  A single-key sort GroupBy needs none of this.
+        lows, domains = [], []
+        for k in key_cols:
+            big = int(jnp.iinfo(k.dtype).max) if k.dtype.kind == "i" \
+                else 2**30
+            lo = int(jnp.where(valid, k, big).min())
+            hi = int(jnp.where(valid, k, -big).max())
+            lows.append(min(lo, 0))
+            domains.append(hi - lows[-1] + 1)
+        total = 1
+        for d in domains:
+            total *= d
+        if total >= _PACK_LIMIT:
+            # packed keys would overflow device int32: host fallback
+            stats.groupby_algorithm = "host-unique (domain overflow)"
+            return _groupby_host(q, cols, valid, values, aggs)
+        if algo == "dense" and total > plan.dense_domain_limit:
             algo = "sort"   # runtime switch (§6.1)
             stats.groupby_algorithm = "sort (runtime switch)"
+        if len(key_cols) > 1 or lows[0] != 0:
+            packed = ops.pack_keys(key_cols, domains, lows)
+        else:
+            lows = domains = None    # raw single key: no unpack needed
+
     if algo == "dense":
-        res = ops.groupby_dense(keys.astype(jnp.int32), valid, values,
-                                int(domain), aggs)
+        res = ops.groupby_dense(packed.astype(jnp.int32), valid, values,
+                                total, aggs)
         counts = np.asarray(res["group_count"])
         sel = counts > 0
-        out = {q.group_by: np.flatnonzero(sel),
-               "group_count": counts[sel]}
+        gkeys = np.flatnonzero(sel)
+        out = {"group_count": counts[sel]}
         for name, _, _ in aggs:
             out[name] = np.asarray(res[name])[sel]
     else:
-        res = ops.groupby_sort(keys, valid, values, plan.max_groups, aggs)
+        res = ops.groupby_sort(packed, valid, values, plan.max_groups, aggs)
         n = int(res["n_groups"])
-        out = {q.group_by: np.asarray(res["group_keys"])[:n],
-               "group_count": np.asarray(res["group_count"])[:n]}
+        if n > plan.max_groups:
+            # more distinct groups than the sort cap: groupby_sort would
+            # silently merge the tail -- host fallback keeps it exact
+            stats.groupby_algorithm = "host-unique (group overflow)"
+            return _groupby_host(q, cols, valid, values, aggs)
+        gkeys = np.asarray(res["group_keys"])[:n]
+        out = {"group_count": np.asarray(res["group_count"])[:n]}
         for name, _, _ in aggs:
             out[name] = np.asarray(res[name])[:n]
-    if q.order_by:
-        key = out.get(q.order_by, out.get(q.group_by))
-        order = np.argsort(key)
-        if q.descending:
-            order = order[::-1]
-        out = {c: v[order] for c, v in out.items()}
-    if q.limit:
-        out = {c: v[: q.limit] for c, v in out.items()}
+    unpacked = [gkeys] if domains is None \
+        else ops.unpack_keys(gkeys, domains, lows)
+    for g, kv in zip(q.group_by, unpacked):
+        out[g] = kv
+    return out
+
+
+def _groupby_host(q: LogicalQuery, cols, valid, values, aggs
+                  ) -> Dict[str, np.ndarray]:
+    """numpy unique-based GroupBy for key domains too wide to pack into
+    the device integer width.  Small-result assumption holds (grouped
+    outputs are aggregated), only the scan stays device-side."""
+    mask = np.asarray(valid)
+    keys2d = np.stack([np.asarray(cols[g])[mask] for g in q.group_by], 1)
+    uniq, inv = np.unique(keys2d, axis=0, return_inverse=True)
+    n_groups = len(uniq)
+    counts = np.bincount(inv, minlength=n_groups)
+    out = {g: uniq[:, i] for i, g in enumerate(q.group_by)}
+    out["group_count"] = counts
+    for name, c, kind in aggs:
+        if kind == "count":
+            out[name] = counts
+            continue
+        v = np.asarray(values[c])[mask]
+        if kind in ("sum", "avg"):
+            acc = np.bincount(inv, weights=v, minlength=n_groups)
+            out[name] = acc / np.maximum(counts, 1) if kind == "avg" \
+                else acc
+        elif kind == "min":
+            acc = np.full(n_groups, np.inf)
+            np.minimum.at(acc, inv, v)
+            out[name] = acc
+        else:
+            acc = np.full(n_groups, -np.inf)
+            np.maximum.at(acc, inv, v)
+            out[name] = acc
     return out

@@ -24,7 +24,7 @@ from ..core.database import VerticaDB
 from ..core.encodings import Encoding, encode
 from ..core.projection import ProjectionDef, SegmentationSpec
 from ..core.types import SQLType
-from ..engine.pipeline import Query
+from ..engine.logical import LogicalQuery, as_ir
 from . import cost as cost_mod
 
 POLICIES = {"load-optimized": 0, "balanced": 2, "query-optimized": 4}
@@ -37,7 +37,8 @@ class DesignReport:
     per_query: List[Tuple[str, float, float]]   # (desc, before_s, after_s)
 
 
-def _candidates_for_query(db: VerticaDB, q: Query) -> List[ProjectionDef]:
+def _candidates_for_query(db: VerticaDB, q: LogicalQuery
+                          ) -> List[ProjectionDef]:
     """Heuristic candidate enumeration (paper phase 1)."""
     table = db.catalog.tables[q.table].schema
     need = sorted(q.needed_columns() & set(table.column_names()))
@@ -45,18 +46,16 @@ def _candidates_for_query(db: VerticaDB, q: Query) -> List[ProjectionDef]:
     sort_firsts = []
     if q.predicate is not None:
         sort_firsts += sorted(q.predicate.bounds())
-    if q.group_by:
-        sort_firsts.append(q.group_by)
-    if q.join:
-        sort_firsts.append(q.join.fact_key)
+    sort_firsts += list(q.group_by)
+    sort_firsts += [j.fact_key for j in q.joins]
     seen = set()
     for first in sort_firsts:
         if first in seen or first not in need:
             continue
         seen.add(first)
         rest = [c for c in need if c != first]
-        seg_cols = (q.join.fact_key,) if q.join else \
-            (first if not q.group_by else q.group_by,)
+        seg_cols = (q.joins[0].fact_key,) if q.joins else \
+            ((first,) if not q.group_by else q.group_by)
         cands.append(ProjectionDef(
             name=f"{q.table}_dbd_{first}",
             anchor=q.table, columns=tuple([first] + rest),
@@ -66,11 +65,12 @@ def _candidates_for_query(db: VerticaDB, q: Query) -> List[ProjectionDef]:
     return cands
 
 
-def design(db: VerticaDB, workload: Sequence[Query], *,
+def design(db: VerticaDB, workload: Sequence, *,
            policy: str = "balanced",
            deploy: bool = False) -> DesignReport:
     from .planner import plan_query
 
+    workload = [as_ir(q) for q in workload]
     budget = POLICIES[policy]
     # baseline costs with the current design
     before = []
@@ -94,7 +94,7 @@ def design(db: VerticaDB, workload: Sequence[Query], *,
             plan = plan_query(db, q)
             a = plan.estimated.total if plan.estimated else 0.0
             per_query.append((repr(q.table) + "/" +
-                              (q.group_by or "scan"), b, a))
+                              (",".join(q.group_by) or "scan"), b, a))
             picked = db.catalog.projections.get(plan.projection)
             if picked is not None and picked.name in proposals and \
                     picked not in chosen:

@@ -1,4 +1,4 @@
-"""The query planner (paper §6.2, a compact V2Opt).
+"""The query planner (paper §6.2, a compact V2Opt), over the logical IR.
 
 Physical-property driven: for each candidate projection we check
   * column coverage (can it answer the query at all),
@@ -6,9 +6,10 @@ Physical-property driven: for each candidate projection we check
     pipelined aggregation),
   * segmentation vs join keys (co-located vs broadcast vs resegment),
 then cost the survivors with the compression-aware model and keep the
-cheapest. GroupBy algorithm choice (dense-hash / sort / RLE-direct) is part
-of the physical plan; SIP filters are planned whenever a selective dim
-predicate exists.
+cheapest.  Each join in the IR's join list gets its own distribution
+strategy and SIP decision; composite group-by keys get per-column domain
+estimates (from container SMAs) that drive both the dense/sort algorithm
+choice and the executor's static key packing.
 """
 from __future__ import annotations
 
@@ -18,8 +19,8 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from ..core.database import VerticaDB
+from ..engine.logical import LogicalQuery, as_ir
 from ..core.encodings import Encoding
-from ..engine.pipeline import Query
 from . import cost as cost_mod
 
 
@@ -29,24 +30,30 @@ class PhysicalPlan:
     sources: List[Tuple[int, str]]          # (host node, projection) pairs
     groupby_algorithm: str = "sort"
     scalar_rle: bool = False           # COUNT on RLE runs, zero decode
-    join_strategy: str = ""
-    use_sip: bool = False
+    join_strategy: str = ""            # "; "-joined per-join strategies
+    join_strategies: Tuple[str, ...] = ()
+    use_sip: bool = False              # any join armed with SIP
+    sip_joins: Tuple[bool, ...] = ()   # per-join SIP decision
+    # per-group-column dense domain estimates (None = unknown); the
+    # executor packs composite keys with these as static radices
+    key_domains: Optional[Tuple[Optional[int], ...]] = None
     dense_domain_limit: int = 1 << 20
     max_groups: int = 1 << 16
     estimated: Optional[cost_mod.CostEstimate] = None
     explain: List[str] = dataclasses.field(default_factory=list)
 
 
-def _fact_columns(q: Query) -> set:
+def _fact_columns(q: LogicalQuery) -> set:
     """Columns the fact-side projection must supply (join output columns
-    come from the dimension build side, not the scan)."""
+    come from the dimension build sides, derived columns are computed)."""
     need = q.needed_columns()
-    if q.join is not None:
-        need -= set(q.join.dim_columns) | {q.join.dim_key}
+    for j in q.joins:
+        need -= set(j.dim_columns) | {j.dim_key}
+    need -= {n for n, _ in q.derived}
     return need
 
 
-def candidate_projections(db: VerticaDB, q: Query):
+def candidate_projections(db: VerticaDB, q: LogicalQuery):
     need = _fact_columns(q)
     out = []
     for p in db.catalog.projections_of(q.table):
@@ -57,7 +64,8 @@ def candidate_projections(db: VerticaDB, q: Query):
     return out
 
 
-def plan_query(db: VerticaDB, q: Query) -> PhysicalPlan:
+def plan_query(db: VerticaDB, q) -> PhysicalPlan:
+    q = as_ir(q)
     cands = candidate_projections(db, q)
     if not cands:
         raise ValueError(f"no projection covers {sorted(_fact_columns(q))}")
@@ -67,11 +75,12 @@ def plan_query(db: VerticaDB, q: Query) -> PhysicalPlan:
         est = cost_mod.scan_cost(db, p, q.predicate, need)
         bonus = 1.0
         # sort-order match: leading sort column in the predicate => pruning
-        # actually bites; on the group-by key => pipelined aggregation
+        # actually bites; on the leading group-by key => pipelined agg
         bounds = q.predicate.bounds() if q.predicate is not None else {}
         if p.sort_order and p.sort_order[0] in bounds:
             bonus *= 0.5
-        if q.group_by and p.sort_order and p.sort_order[0] == q.group_by:
+        if q.group_by and p.sort_order \
+                and p.sort_order[0] == q.group_by[0]:
             bonus *= 0.8
         score = est.total * bonus
         if best is None or score < best[0]:
@@ -97,25 +106,34 @@ def plan_query(db: VerticaDB, q: Query) -> PhysicalPlan:
             if (host, owner_proj) not in plan.sources:
                 plan.sources.append((host, owner_proj))
 
-    # join strategy + SIP
-    if q.join is not None:
-        dim_rows = len(db.read_table(q.join.dim_table)[q.join.dim_key])
+    # join strategy + SIP, one decision per join edge
+    strategies, sips = [], []
+    for spec in q.joins:
+        dim_rows = _dim_row_estimate(db, db.catalog.super_of(
+            spec.dim_table))
         strat, net_s = cost_mod.join_distribution(
-            db, proj, q.join.fact_key, q.join.dim_table, dim_rows,
-            dim_key=q.join.dim_key)
-        plan.join_strategy = strat
+            db, proj, spec.fact_key, spec.dim_table, dim_rows,
+            dim_key=spec.dim_key)
+        strategies.append(strat)
         est.net_s += net_s
         # SIP only pays when the build side actually filters (the paper's
-        # predictability lesson: drop special cases that sometimes lose);
-        # without a dim predicate every fact row joins and the filter is
-        # pure overhead.
-        plan.use_sip = q.join.dim_predicate is not None
-        plan.explain.append(f"join {strat}, SIP={plan.use_sip}")
+        # predictability lesson: drop special cases that sometimes lose)
+        # and the probe key is a physical fact column the scan can see --
+        # snowflake keys materialize only after an earlier join.
+        sips.append(spec.dim_predicate is not None
+                    and spec.fact_key in proj.columns)
+        plan.explain.append(
+            f"join {spec.dim_table} on {spec.fact_key}: {strat}, "
+            f"SIP={sips[-1]}")
+    plan.join_strategies = tuple(strategies)
+    plan.join_strategy = "; ".join(strategies)
+    plan.sip_joins = tuple(sips)
+    plan.use_sip = any(sips)
 
     # scalar COUNT with an EXACT integer interval on the RLE sort leader:
     # run-level math only (bounds() is pruning-conservative; counting needs
     # exact_int_interval -- see engine/expr.py)
-    if q.group_by is None and q.aggs and q.join is None \
+    if not q.group_by and q.aggs and not q.joins and not q.derived \
             and all(a[2] == "count" for a in q.aggs):
         from ..engine.expr import exact_int_interval
         leader = proj.sort_order[0] if proj.sort_order else None
@@ -126,26 +144,54 @@ def plan_query(db: VerticaDB, q: Query) -> PhysicalPlan:
             plan.scalar_rle = True
             plan.explain.append("scalar COUNT on RLE runs (no decode)")
 
-    # groupby algorithm: dense for small domains (dict-encoded /
-    # low-cardinality), else sort-based; RLE-direct noted when available
-    if q.group_by is not None:
-        if q.join is not None and q.group_by in q.join.dim_columns:
-            # grouping on a dimension attribute: its domain comes from the
-            # dim projection's SMAs (the fact side never stores it)
-            dom = _domain_estimate(
-                db, db.catalog.super_of(q.join.dim_table), q.group_by)
+    # groupby algorithm: dense when the packed key domain (product of
+    # per-column SMA domains) is small, else sort-based; RLE-direct for a
+    # single already-sorted RLE key with count-only aggregates
+    if q.group_by:
+        derived_names = {n for n, _ in q.derived}
+        doms: List[Optional[int]] = []
+        for g in q.group_by:
+            if g in derived_names:
+                doms.append(None)
+                continue
+            src = proj
+            for spec in q.joins:
+                if g in spec.dim_columns:
+                    # a dimension attribute: its domain comes from the dim
+                    # projection's SMAs (the fact side never stores it)
+                    src = db.catalog.super_of(spec.dim_table)
+                    break
+            doms.append(_domain_estimate(db, src, g))
+        plan.key_domains = tuple(doms)
+        if all(d is not None for d in doms):
+            total = 1
+            for d in doms:
+                total *= d
+            plan.groupby_algorithm = (
+                "dense" if 0 <= total <= plan.dense_domain_limit
+                else "sort")
         else:
-            dom = _domain_estimate(db, proj, q.group_by)
-        if dom is not None and 0 <= dom <= plan.dense_domain_limit:
-            plan.groupby_algorithm = "dense"
-        else:
+            total = None
             plan.groupby_algorithm = "sort"
-        if _is_rle_sorted(db, proj, q.group_by) and not q.predicate \
-                and q.join is None and all(a[2] == "count" for a in q.aggs):
+        if len(q.group_by) == 1 \
+                and _is_rle_sorted(db, proj, q.group_by[0]) \
+                and not q.predicate and not q.joins \
+                and all(a[2] == "count" for a in q.aggs):
             plan.groupby_algorithm = "rle"
         plan.explain.append(
-            f"groupby {plan.groupby_algorithm} (domain~{dom})")
+            f"groupby {plan.groupby_algorithm} "
+            f"(domains {doms} -> {total})")
     return plan
+
+
+def _dim_row_estimate(db: VerticaDB, proj) -> int:
+    """Build-side cardinality from store metadata (no decode; delete
+    vectors ignored -- an overcount is fine for a strategy decision)."""
+    up = [n for n in db.nodes if n.up]
+    if proj.segmentation.replicated:
+        up = up[:1]
+    return sum(st.ros_rows() + st.wos.n_rows
+               for n in up for st in [n.stores[proj.name]])
 
 
 def _domain_estimate(db: VerticaDB, proj, col: str) -> Optional[int]:

@@ -1,0 +1,419 @@
+"""Logical-plan IR + fluent builder front-end vs numpy SQL semantics:
+multi-join star queries, composite group-by keys, derived projections,
+HAVING, multi-key ORDER BY, plan-cache signatures, and the legacy
+Query/JoinSpec compat shim."""
+import numpy as np
+import pytest
+
+from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
+from repro.engine import (PLAN_CACHE, JoinSpec, LogicalJoin, LogicalQuery,
+                          Query, col, execute, lower)
+from repro.engine import logical as L
+
+
+def star_db(n=4000, direct=True, seed=0):
+    rng = np.random.default_rng(seed)
+    fact = {"a": rng.integers(0, 40, n), "b": rng.integers(0, 8, n),
+            "c": rng.integers(0, 5, n),
+            "v": np.round(rng.normal(10, 3, n), 3)}
+    dim = {"k": np.arange(30), "attr": rng.integers(0, 7, 30)}
+    dim2 = {"k2": np.arange(8), "region": rng.integers(0, 3, 8)}
+    db = VerticaDB(n_nodes=4, k_safety=1, block_rows=64)
+    db.create_table(TableSchema("f", (
+        ColumnDef("a"), ColumnDef("b"), ColumnDef("c"),
+        ColumnDef("v", SQLType.FLOAT))),
+        sort_order=("a",), segment_by=("a",))
+    db.create_table(TableSchema("d", (ColumnDef("k"), ColumnDef("attr"))),
+                    sort_order=("k",), segment_by=())
+    db.create_table(TableSchema("d2", (ColumnDef("k2"),
+                                       ColumnDef("region"))),
+                    sort_order=("k2",), segment_by=())
+    t = db.begin(direct_to_ros=direct)
+    db.insert(t, "f", fact)
+    db.insert(t, "d", dim)
+    db.insert(t, "d2", dim2)
+    db.commit(t)
+    return db, fact, dim, dim2
+
+
+def oracle_rows(fact, dim, dim2, pred_mask):
+    """Joined (attr, region, v) rows surviving both inner joins."""
+    m = pred_mask & np.isin(fact["a"], dim["k"]) \
+        & np.isin(fact["b"], dim2["k2"])
+    attr = np.full(64, -1)
+    attr[dim["k"]] = dim["attr"]
+    region = np.full(64, -1)
+    region[dim2["k2"]] = dim2["region"]
+    return attr[fact["a"][m]], region[fact["b"][m]], fact["v"][m]
+
+
+def group_oracle(keys_cols, values):
+    exp = {}
+    for row in zip(*keys_cols, values):
+        *k, v = row
+        k = tuple(int(x) for x in k)
+        cnt, s = exp.get(k, (0, 0.0))
+        exp[k] = (cnt + 1, s + v)
+    return exp
+
+
+def test_two_join_two_col_groupby_matches_numpy():
+    db, fact, dim, dim2 = star_db()
+    qb = (db.query("f")
+          .where(col("a") >= 5)
+          .join("d", on=("a", "k"), cols=("attr",))
+          .join("d2", on=("b", "k2"), cols=("region",))
+          .group_by("attr", "region")
+          .agg(n=("*", "count"), s=("v", "sum")))
+    out = qb.collect()
+    ga, gr, gv = oracle_rows(fact, dim, dim2, fact["a"] >= 5)
+    exp = group_oracle((ga, gr), gv)
+    got = {(int(a), int(r)): (int(n), float(s))
+           for a, r, n, s in zip(out["attr"], out["region"],
+                                 out["n"], out["s"])}
+    assert set(got) == set(exp)
+    for k, (cnt, s) in exp.items():
+        assert got[k][0] == cnt
+        assert abs(got[k][1] - s) < 1e-2
+
+
+def test_repeat_builder_query_hits_plan_cache():
+    db, *_ = star_db()
+    qb = (db.query("f")
+          .where(col("a") >= 5)
+          .join("d", on=("a", "k"), cols=("attr",))
+          .join("d2", on=("b", "k2"), cols=("region",))
+          .group_by("attr", "region")
+          .agg(n=("*", "count")))
+    qb.collect()
+    first = qb.stats
+    qb.collect()
+    assert first.fused and qb.stats.fused
+    assert qb.stats.plan_cache == "hit"
+    # the cache key is derived from the IR's canonical exec signature
+    assert any(qb.to_ir().exec_signature() in sig
+               for sig in PLAN_CACHE._fns)
+    # HAVING/ORDER BY/LIMIT shape host-side: varying them reuses the
+    # same fused program instead of re-tracing
+    q2 = qb.limit(7)
+    q2.collect()
+    assert q2.stats.plan_cache == "hit"
+
+
+def test_three_col_groupby_cold_path_matches_numpy():
+    # non-direct insert leaves rows in the WOS -> the fused executor
+    # declines and the general pipeline (runtime-packed keys) runs
+    db, fact, dim, dim2 = star_db(direct=False)
+    qb = (db.query("f").group_by("a", "b", "c")
+          .agg(n=("*", "count"), s=("v", "sum")))
+    out = qb.collect()
+    assert not qb.stats.fused
+    exp = group_oracle((fact["a"], fact["b"], fact["c"]), fact["v"])
+    got = {(int(a), int(b), int(c)): (int(n), float(s))
+           for a, b, c, n, s in zip(out["a"], out["b"], out["c"],
+                                    out["n"], out["s"])}
+    assert set(got) == set(exp)
+    for k, (cnt, s) in exp.items():
+        assert got[k][0] == cnt
+        assert abs(got[k][1] - s) < 1e-2
+
+
+def test_derived_projection_having_order_limit():
+    db, fact, dim, dim2 = star_db()
+    qb = (db.query("f")
+          .select(double_v=col("v") * 2)
+          .group_by("b")
+          .agg(s=("double_v", "sum"), n=("*", "count"))
+          .having(col("n") > 10)
+          .order_by("-s")
+          .limit(3))
+    out = qb.collect()
+    exp = group_oracle((fact["b"],), 2 * fact["v"])
+    rows = [(k[0], c, s) for k, (c, s) in exp.items() if c > 10]
+    rows.sort(key=lambda r: -r[2])
+    rows = rows[:3]
+    assert out["b"].tolist() == [r[0] for r in rows]
+    np.testing.assert_allclose(out["s"], [r[2] for r in rows], rtol=1e-4)
+
+
+def test_multi_key_order_by():
+    db, fact, *_ = star_db()
+    out = (db.query("f").group_by("b", "c").agg(n=("*", "count"))
+           .order_by("b", "-c").collect())
+    pairs = list(zip(out["b"].tolist(), out["c"].tolist()))
+    assert pairs == sorted(pairs, key=lambda p: (p[0], -p[1]))
+
+
+def test_negative_group_keys_pack_correctly():
+    rng = np.random.default_rng(3)
+    n = 1000
+    fact = {"a": np.arange(n) % 7, "b": rng.integers(-5, 5, n),
+            "c": np.zeros(n, np.int64), "v": np.ones(n)}
+    db = VerticaDB(n_nodes=2, k_safety=0, block_rows=64)
+    db.create_table(TableSchema("f", (
+        ColumnDef("a"), ColumnDef("b"), ColumnDef("c"),
+        ColumnDef("v", SQLType.FLOAT))),
+        sort_order=("a",), segment_by=("a",))
+    t = db.begin(direct_to_ros=True)
+    db.insert(t, "f", fact)
+    db.commit(t)
+    out = db.query("f").group_by("a", "b").agg(n=("*", "count")).collect()
+    exp = group_oracle((fact["a"], fact["b"]), fact["v"])
+    got = {(int(a), int(b)): int(c)
+           for a, b, c in zip(out["a"], out["b"], out["n"])}
+    assert got == {k: c for k, (c, _) in exp.items()}
+
+
+def test_snowflake_chain_join():
+    # second join probes a column produced by the first join
+    rng = np.random.default_rng(4)
+    n = 2000
+    fact = {"a": rng.integers(0, 20, n), "v": np.ones(n)}
+    dim = {"k": np.arange(20), "cust": rng.integers(0, 6, 20)}
+    dim2 = {"cust_id": np.arange(6), "seg": rng.integers(0, 3, 6)}
+    db = VerticaDB(n_nodes=2, k_safety=0, block_rows=64)
+    db.create_table(TableSchema("f", (
+        ColumnDef("a"), ColumnDef("v", SQLType.FLOAT))),
+        sort_order=("a",), segment_by=("a",))
+    db.create_table(TableSchema("d", (ColumnDef("k"), ColumnDef("cust"))),
+                    sort_order=("k",), segment_by=())
+    db.create_table(TableSchema("d2", (ColumnDef("cust_id"),
+                                       ColumnDef("seg"))),
+                    sort_order=("cust_id",), segment_by=())
+    t = db.begin(direct_to_ros=True)
+    db.insert(t, "f", fact)
+    db.insert(t, "d", dim)
+    db.insert(t, "d2", dim2)
+    db.commit(t)
+    out = (db.query("f")
+           .join("d", on=("a", "k"), cols=("cust",))
+           .join("d2", on=("cust", "cust_id"), cols=("seg",))
+           .group_by("seg").agg(n=("*", "count")).collect())
+    seg_of = dim2["seg"][dim["cust"][fact["a"]]]
+    exp = {int(s): int((seg_of == s).sum()) for s in np.unique(seg_of)}
+    got = dict(zip(out["seg"].tolist(), out["n"].tolist()))
+    assert got == exp
+
+
+def test_signatures_of_distinct_plans_never_collide():
+    base = LogicalQuery("f", group_by=("a",),
+                        aggs=(("n", "*", "count"),))
+    variants = [
+        base,
+        LogicalQuery("f", group_by=("a", "b"),
+                     aggs=(("n", "*", "count"),)),
+        LogicalQuery("f", group_by=("a",), aggs=(("n", "v", "sum"),)),
+        LogicalQuery("f", predicate=col("a") > 3, group_by=("a",),
+                     aggs=(("n", "*", "count"),)),
+        LogicalQuery("f", predicate=col("a") > 4, group_by=("a",),
+                     aggs=(("n", "*", "count"),)),
+        LogicalQuery("f", joins=(LogicalJoin("d", "a", "k"),),
+                     group_by=("a",), aggs=(("n", "*", "count"),)),
+        LogicalQuery("f", joins=(LogicalJoin("d", "a", "k",
+                                             dim_columns=("attr",)),),
+                     group_by=("a",), aggs=(("n", "*", "count"),)),
+        LogicalQuery("f", group_by=("a",), aggs=(("n", "*", "count"),),
+                     having=col("n") > 1),
+        LogicalQuery("f", group_by=("a",), aggs=(("n", "*", "count"),),
+                     order_by=(("n", True),)),
+        LogicalQuery("f", group_by=("a",), aggs=(("n", "*", "count"),),
+                     limit=5),
+        LogicalQuery("f", derived=(("w", col("v") * 2),),
+                     group_by=("a",), aggs=(("s", "w", "sum"),)),
+    ]
+    sigs = [q.signature() for q in variants]
+    assert len(set(sigs)) == len(sigs), "distinct IR plans collided"
+    # identical plans produce identical (hashable, cache-usable) keys
+    assert base.signature() == LogicalQuery(
+        "f", group_by=("a",), aggs=(("n", "*", "count"),)).signature()
+    assert hash(base.signature()) is not None
+
+
+def test_node_tree_lowering_roundtrip():
+    spec = LogicalJoin("d", "a", "k", dim_columns=("attr",))
+    tree = L.Limit(
+        L.Sort(
+            L.Filter(
+                L.Aggregate(
+                    L.Join(L.Filter(L.Scan("f", ("a", "b", "v")),
+                                    col("a") > 2),
+                           spec),
+                    ("attr", "b"), (("n", "*", "count"),)),
+                col("n") > 1),            # post-aggregate Filter = HAVING
+            (("n", True),)),
+        5)
+    q = lower(tree)
+    assert q.table == "f"
+    assert q.joins == (spec,)
+    assert q.group_by == ("attr", "b")
+    assert q.having is not None and q.predicate is not None
+    assert q.order_by == (("n", True),) and q.limit == 5
+    # builder produces the same canonical signature
+    db, *_ = star_db(n=100)
+    qb = (db.query("f").where(col("a") > 2)
+          .join("d", on=("a", "k"), cols=("attr",))
+          .group_by("attr", "b").agg(n=("*", "count"))
+          .having(col("n") > 1).order_by("-n").limit(5))
+    assert qb.to_ir().signature() == q.signature()
+
+
+def test_ir_validation_errors():
+    with pytest.raises(ValueError):
+        LogicalQuery("f", aggs=(("s", "*", "sum"),)).validate()
+    with pytest.raises(ValueError):
+        LogicalQuery("f", aggs=(("s", "v", "median"),)).validate()
+    with pytest.raises(ValueError):
+        LogicalQuery("f", group_by=("a",), aggs=(("n", "*", "count"),),
+                     having=col("zzz") > 0).validate()
+    with pytest.raises(ValueError):
+        LogicalQuery("f", columns=("b",), group_by=("a",),
+                     aggs=(("n", "*", "count"),)).validate()
+
+
+def test_legacy_query_shim_equivalent_to_builder():
+    db, fact, dim, _ = star_db()
+    legacy = Query("f", predicate=col("a") >= 10,
+                   join=JoinSpec("d", "a", "k", dim_columns=("attr",)),
+                   group_by="attr", aggs=(("cnt", "attr", "count"),))
+    out_l, stats_l = execute(db, legacy)
+    qb = (db.query("f").where(col("a") >= 10)
+          .join("d", on=("a", "k"), cols=("attr",))
+          .group_by("attr").agg(cnt=("attr", "count")))
+    out_b = qb.collect()
+    assert legacy.to_ir().signature() == qb.to_ir().signature()
+    np.testing.assert_array_equal(np.sort(out_l["attr"]),
+                                  np.sort(out_b["attr"]))
+    got_l = dict(zip(out_l["attr"].tolist(), out_l["cnt"].tolist()))
+    got_b = dict(zip(out_b["attr"].tolist(), out_b["cnt"].tolist()))
+    assert got_l == got_b
+    # JoinSpec IS the IR join node (field-for-field)
+    assert JoinSpec is LogicalJoin
+
+
+def test_builder_select_rows_with_derived():
+    db, fact, *_ = star_db(n=500)
+    out = (db.query("f").select("a", "v", vx=col("v") * 10)
+           .where(col("a") < 5).order_by("a").collect())
+    m = fact["a"] < 5
+    assert len(out["a"]) == int(m.sum())
+    np.testing.assert_allclose(np.sort(out["vx"]),
+                               np.sort(10 * fact["v"][m]), rtol=1e-5)
+
+
+def test_frontend_overhead_recorded():
+    db, *_ = star_db(n=200)
+    qb = db.query("f").group_by("b").agg(n=("*", "count"))
+    qb.collect()
+    assert qb.stats.frontend_s >= 0.0
+    assert qb.stats.wall_s >= qb.stats.frontend_s
+
+
+def test_plan_cache_misses_when_key_domains_grow():
+    # the fused closure bakes pack radices from SMA domains; widening a
+    # key's range after a commit must MISS (stale radices would merge or
+    # mislabel groups)
+    db, fact, dim, dim2 = star_db()
+    qb = (db.query("f")
+          .join("d", on=("a", "k"), cols=("attr",))
+          .join("d2", on=("b", "k2"), cols=("region",))
+          .group_by("attr", "region").agg(n=("*", "count")))
+    out1 = qb.collect()
+    total1 = int(np.sum(out1["n"]))
+    # widen the 'region' domain and add rows routed to the new value
+    t = db.begin(direct_to_ros=True)
+    db.insert(t, "d2", {"k2": np.asarray([50]),
+                        "region": np.asarray([9])})
+    db.insert(t, "f", {"a": np.asarray([1, 2]),
+                       "b": np.asarray([50, 50]),
+                       "c": np.asarray([0, 0]),
+                       "v": np.asarray([1.0, 1.0])})
+    db.commit(t)
+    out2 = qb.collect()
+    assert int(np.sum(out2["n"])) == total1 + 2
+    assert 9 in out2["region"].tolist()
+    row = (out2["region"] == 9)
+    assert int(out2["n"][row].sum()) == 2
+
+
+def test_order_by_unknown_column_rejected():
+    with pytest.raises(ValueError):
+        LogicalQuery("f", group_by=("a",), aggs=(("n", "*", "count"),),
+                     order_by=(("price", False),)).validate()
+    with pytest.raises(ValueError):
+        LogicalQuery("f", columns=("a",),
+                     order_by=(("b", False),)).validate()
+
+
+def test_descending_order_no_precision_loss():
+    # int64 keys beyond 2^53 must keep exact descending order
+    big = 1 << 60
+    vals = np.asarray([big + 3, big + 1, big + 2, 5], np.int64)
+    from repro.engine.pipeline import _finalize
+    q = LogicalQuery("f", columns=("x",), order_by=(("x", True),))
+    out = _finalize(q, {"x": vals})
+    assert out["x"].tolist() == sorted(vals.tolist(), reverse=True)
+
+
+def test_join_build_cache_invalidated_on_drop_partition():
+    # build sides are cached per (dim, join-sig, epoch); drop_partition
+    # bypasses MVCC (same epoch, fewer rows) and must evict them
+    rng = np.random.default_rng(5)
+    n = 1000
+    db = VerticaDB(n_nodes=2, k_safety=0, block_rows=64)
+    db.create_table(TableSchema("f", (
+        ColumnDef("a"), ColumnDef("v", SQLType.FLOAT))),
+        sort_order=("a",), segment_by=("a",))
+    db.create_table(TableSchema("d", (ColumnDef("k"), ColumnDef("attr"))),
+                    sort_order=("k",), segment_by=(),
+                    partition_by=("k", "div_1000"))
+    t = db.begin(direct_to_ros=True)
+    db.insert(t, "f", {"a": rng.integers(0, 20, n), "v": np.ones(n)})
+    db.insert(t, "d", {"k": np.arange(20), "attr": np.arange(20) % 3})
+    db.commit(t)
+    qb = (db.query("f").join("d", on=("a", "k"), cols=("attr",))
+          .group_by("attr").agg(c=("*", "count")))
+    out1 = qb.collect()
+    assert int(np.sum(out1["c"])) == n
+    db.drop_partition("d", 0)        # all dim rows live in partition 0
+    out2 = qb.collect()
+    assert len(out2["attr"]) == 0    # inner join now drops every row
+
+
+def test_bare_count_star_no_predicate():
+    # count(*) with no predicate/group-by has an empty natural column
+    # set; the scan must still produce one column for row validity
+    db, fact, *_ = star_db(n=500)
+    out = db.query("f").agg(n=("*", "count")).collect()
+    assert int(out["n"][0]) == 500
+    # and with WOS rows pending (non-direct insert)
+    db2, fact2, *_ = star_db(n=300, direct=False)
+    out2 = db2.query("f").agg(n=("*", "count")).collect()
+    assert int(out2["n"][0]) == 300
+
+
+def test_left_join_unmatched_rows_null_group():
+    db, fact, dim, _ = star_db()
+    out = (db.query("f")
+           .join("d", on=("a", "k"), cols=("attr",), how="left")
+           .group_by("attr").agg(n=("*", "count")).collect())
+    unmatched = int((fact["a"] >= 30).sum())      # dim keys stop at 29
+    got = dict(zip(out["attr"].tolist(), out["n"].tolist()))
+    assert got.pop(-1) == unmatched               # NULL sentinel group
+    attr_of = np.full(64, -1)
+    attr_of[dim["k"]] = dim["attr"]
+    m = fact["a"] < 30
+    for a in np.unique(attr_of[fact["a"][m]]):
+        assert got[int(a)] == int((attr_of[fact["a"][m]] == a).sum())
+    # plain select does not leak the internal _matched column
+    sel = (db.query("f")
+           .join("d", on=("a", "k"), cols=("attr",), how="left")
+           .limit(5).collect())
+    assert "_matched" not in sel
+
+
+def test_empty_scan_keeps_result_schema():
+    db, *_ = star_db(n=200)
+    out = (db.query("f").select("a", m=col("v") + col("v"))
+           .where(col("a") > 10_000).collect())
+    assert set(out) == {"a", "m"}
+    assert len(out["a"]) == 0 and len(out["m"]) == 0

@@ -120,10 +120,16 @@ cfg = configs.get("olmoe-1b-7b").reduced()   # 4 experts
 d = cfg.d_model
 p = init_params(moe_decls(d, cfg.moe), jax.random.key(0))
 x = jax.random.normal(jax.random.key(1), (4, 16, d), jnp.float32)
-o_ref, a_ref = moe_apply(p, x, cfg.moe)      # scatter oracle, 1 device
+# drop-free capacity: under overflow the two paths drop DIFFERENT tokens
+# (the oracle budgets capacity over the global batch, the expert-local
+# path per DP shard -- both standard GShard policies), so dispatch
+# equivalence is only defined with no drops on either side
+moe_ref = dataclasses.replace(
+    cfg.moe, capacity_factor=float(cfg.moe.num_experts))
+o_ref, a_ref = moe_apply(p, x, moe_ref)      # scatter oracle, 1 device
 
 mesh = make_host_mesh(data=2, model=4)       # experts split 4 ways
-moe_el = dataclasses.replace(cfg.moe, dispatch="a2a")
+moe_el = dataclasses.replace(moe_ref, dispatch="a2a")
 with activation_hints(rules_for(cfg, "train"), mesh):
     o2, a2 = moe_apply(p, x, moe_el)
 err = float(jnp.abs(o_ref - o2).max())

@@ -46,8 +46,11 @@ def test_hlo_cost_multiplies_loop_trips():
     c1 = analyze_hlo(one.as_text())
     c7 = analyze_hlo(loop.as_text())
     assert abs(c7.flops - 7 * c1.flops) < 0.01 * c7.flops
-    # and xla's own cost_analysis does NOT (the reason hlo_cost exists)
-    assert loop.cost_analysis()["flops"] < 2 * c1.flops
+    # and xla's own cost_analysis does NOT (the reason hlo_cost exists);
+    # newer jax returns a per-device list instead of a bare dict
+    ca = loop.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca["flops"] < 2 * c1.flops
 
 
 def test_hlo_cost_nested_loops():
