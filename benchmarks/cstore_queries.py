@@ -214,8 +214,40 @@ def run(report):
               f"speedup {tb/tv:5.2f}x  cache "
               f"{stats.block_cache_hits}h/{stats.block_cache_misses}m  "
               f"pruned {stats.blocks_pruned}/{stats.blocks_total}")
+    # --- segmented-vs-single-node: the same warm queries routed through
+    # the multi-device executor (engine/segmented.py); on a 1-device CPU
+    # run this measures pure segmentation overhead, on N devices the
+    # scale-out win.  Recorded into BENCH_cstore.json PR-over-PR. ---
+    seg_names = ("Q2", "Q3", "Q4", "Q6")
+    mesh = db.attach_mesh()
+    n_shards = int(mesh.shape["data"])
+    seg_total = 0.0
+    seg_all = True
+    for name in seg_names:
+        q = QUERIES[name]
+        last = {}
+
+        def run_seg(q=q, last=last):
+            out, st = execute(db, q)
+            last["stats"] = st
+            return out
+        ts = _time(run_seg)
+        seg_all &= last["stats"].segmented
+        seg_total += ts
+    db.detach_mesh()
+    single_total = sum(rows[n]["vertica_ms"] for n in seg_names) / 1e3
+    seg_row = {"n_shards": n_shards, "queries": list(seg_names),
+               "segmented_s": seg_total, "single_node_s": single_total,
+               "speedup_vs_single_node": single_total / seg_total,
+               "all_segmented": bool(seg_all)}
+    print(f"[cstore] segmented ({n_shards} shard(s)): "
+          f"{seg_total*1e3:.1f}ms vs single-node "
+          f"{single_total*1e3:.1f}ms = "
+          f"{single_total/seg_total:.2f}x over {list(seg_names)}")
+
     result = {
         "n_fact": n_fact, "quick": _quick(), "queries": rows,
+        "segmented": seg_row,
         "total_vertica_s": tot_v, "total_baseline_s": tot_b,
         "total_cold_s": tot_cold, "total_warm_s": tot_v,
         "total_frontend_s": tot_fe,

@@ -78,8 +78,9 @@ def run(report):
     keys = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
     vals = jnp.asarray(rng.normal(size=n), jnp.float32)
     dest = keys % mesh.shape["data"]
-    out, valid = resegment(mesh, "data", {"k": keys, "v": vals},
-                           dest, capacity=2 * n)
+    out, valid, overflow = resegment(mesh, "data", {"k": keys, "v": vals},
+                                     dest, capacity=2 * n)
+    assert int(np.asarray(overflow).sum()) == 0
     kept = np.asarray(out["k"])[np.asarray(valid)]
     assert sorted(kept.tolist()) == sorted(np.asarray(keys).tolist())
     print(f"[distribution] resegment round-trip ok on "

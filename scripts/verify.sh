@@ -20,7 +20,16 @@ python -m pytest -q -x -p no:cacheprovider \
     tests/test_block_cache.py \
     tests/test_encodings.py \
     tests/test_segmentation_sma.py \
+    tests/test_segmentation_props.py \
     tests/test_locks.py
+
+echo "== segmented differential oracle (8-device CPU mesh) =="
+# a separate process: jax locks the device count at backend init, so the
+# 8-placeholder-device mesh needs XLA_FLAGS set before the first import
+# (test_segmentation_props.py is host-only and already ran in tier-1)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q -x -p no:cacheprovider \
+    tests/test_segmented_exec.py
 
 echo "== quick cstore benchmark =="
 PREV=""

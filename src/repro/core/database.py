@@ -81,6 +81,10 @@ class VerticaDB:
         # device-resident block cache, shared by every store of this DB
         # (our HBM analog of Vertica leaning on the OS page cache)
         self.block_cache = BlockCache(cache_budget_bytes)
+        # device mesh for the segmented executor (engine/segmented.py);
+        # None = single-device execution
+        self.mesh = None
+        self.mesh_axis = "data"
 
     # ------------------------------------------------------------- DDL --
 
@@ -116,6 +120,22 @@ class VerticaDB:
                 proj, WOS(proj.name), cache=self.block_cache)
 
     # ----------------------------------------------------------- query --
+
+    def attach_mesh(self, mesh=None, axis: str = "data"):
+        """Route aggregate queries through the segmented multi-device
+        executor (engine/segmented.py).  With no argument, builds a 1-D
+        query mesh over every visible jax device.  Tuple-to-shard
+        ownership follows each projection's SegmentationSpec hash ring
+        (core/segmentation.shard_of)."""
+        if mesh is None:
+            from ..distributed.mesh import make_query_mesh
+            mesh = make_query_mesh(axis=axis)
+        self.mesh, self.mesh_axis = mesh, axis
+        return mesh
+
+    def detach_mesh(self):
+        """Back to single-device execution."""
+        self.mesh = None
 
     def query(self, table: str):
         """Fluent relational front-end (engine/builder.py):
@@ -433,6 +453,10 @@ class VerticaDB:
                     store.invalidate_cached([c.id for c in drop])
                     for c in drop:
                         store.delete_vectors.pop(c.id, None)
+                # the segmented executor's partitioned scan slabs span
+                # containers; their keys track the live container-id set,
+                # but evict eagerly so dead slabs don't hold HBM budget
+                self.block_cache.invalidate_container(f"seg:{proj.name}")
             # dropping containers bypasses MVCC: cached join build sides
             # of this table (engine/executor.py) are stale at EVERY epoch
             self.block_cache.invalidate_container(f"dim:{table}")

@@ -34,6 +34,17 @@ def hash_columns(*cols: np.ndarray) -> np.ndarray:
     return (h % C_MAX).astype(np.uint64)
 
 
+def shard_of(ring: np.ndarray, n_shards: int) -> np.ndarray:
+    """Offset-free ring-range assignment: the base map from a ring value to
+    one of ``n_shards`` contiguous ranges.  The segmented executor
+    (engine/segmented.py) uses this for *device* shard placement -- the
+    same row must land on the same shard no matter which physical store
+    (primary or ring-offset buddy) served it, so the buddy offset applies
+    only to node routing, never here."""
+    return (np.asarray(ring).astype(np.float64) * n_shards
+            / float(C_MAX)).astype(np.int64).astype(np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentationSpec:
     """SEGMENTED BY HASH(cols) ALL NODES / UNSEGMENTED (replicated)."""
@@ -54,8 +65,7 @@ class SegmentationSpec:
     def node_of(self, ring: np.ndarray, n_nodes: int) -> np.ndarray:
         """Ring range assignment with buddy offset (paper §5.2: a buddy
         projection's segmentation guarantees no row lands on the same node)."""
-        base = (ring.astype(np.float64) * n_nodes / float(C_MAX)).astype(
-            np.int64)
+        base = shard_of(ring, n_nodes).astype(np.int64)
         return ((base + self.offset) % n_nodes).astype(np.int32)
 
     def local_segment_of(self, ring: np.ndarray, n_nodes: int) -> np.ndarray:
@@ -90,7 +100,6 @@ def rebalance_plan(n_old: int, n_new: int,
             point = node * width + (seg + 0.5) * width / n_local
             new_node = int(point * n_new / float(C_MAX))
             new_node = min(new_node, n_new - 1)
-            if new_node != node or n_new < n_old:
-                if new_node != node:
-                    moves.append((node, seg, new_node))
+            if new_node != node:
+                moves.append((node, seg, new_node))
     return moves

@@ -18,6 +18,18 @@ import jax
 POD, DATA, MODEL = "pod", "data", "model"
 
 
+def make_query_mesh(n_shards: Optional[int] = None, axis: str = DATA):
+    """1-D mesh for the segmented query executor (engine/segmented.py):
+    every shard is one 'node' of the Vertica ring, tuples land on shards
+    by segmentation hash.  Defaults to every visible device; built lazily
+    so importing this module never initializes the jax backend."""
+    import numpy as np
+
+    n = n_shards if n_shards is not None else jax.device_count()
+    devs = np.asarray(jax.devices()[:n])
+    return jax.sharding.Mesh(devs, (axis,))
+
+
 def mesh_axis_size(mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 

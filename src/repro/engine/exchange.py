@@ -24,12 +24,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 def resegment(mesh: Mesh, axis: str, cols: Dict[str, jax.Array],
               dest: jax.Array, capacity: int
-              ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+              ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
     """Move each row to the shard ``dest[i]`` (hash-segmentation target).
 
-    Returns (columns, valid) with per-shard static capacity; overflow
-    drops (callers size capacity via the planner's stats). One all_to_all
-    per column -- each tuple crosses the wire exactly once."""
+    Returns (columns, valid, overflow) with per-shard static capacity.
+    ``overflow`` is an (n_shards,) int32 count of tuples destined to each
+    shard that did NOT fit in ``capacity // n_shards`` slots and were
+    dropped -- callers MUST check it (``overflow.sum() == 0``) and either
+    retry with a larger capacity or fail loudly; silent truncation is a
+    wrong answer, not a slow one.  One all_to_all per column -- each tuple
+    crosses the wire exactly once."""
     n_shards = mesh.shape[axis]
 
     def local(dest_l, *vals):
@@ -41,25 +45,33 @@ def resegment(mesh: Mesh, axis: str, cols: Dict[str, jax.Array],
         pos = (jnp.cumsum(onehot, axis=0) - onehot)[
             jnp.arange(n_local), dest_l]
         keep = pos < per
-        out_valid = jnp.zeros((n_shards, per), jnp.bool_)
-        out_valid = out_valid.at[dest_l, jnp.where(keep, pos, per - 1)].set(
-            keep)
+        # rows this source shard wanted to send to each destination but
+        # could not fit; global per-destination overflow is the psum
+        dropped = (onehot * (~keep)[:, None].astype(jnp.int32)).sum(axis=0)
+        overflow = jax.lax.psum(dropped, axis)
+        # overflowing rows write to a scratch column (per) that is sliced
+        # off -- writing them to per-1 would clobber the legitimate last
+        # slot and silently drop one MORE tuple than reported
+        slot = jnp.where(keep, pos, per)
+        out_valid = jnp.zeros((n_shards, per + 1), jnp.bool_)
+        out_valid = out_valid.at[dest_l, slot].set(keep)[:, :per]
         outs = []
         for v in vals:
-            buf = jnp.zeros((n_shards, per), v.dtype)
-            buf = buf.at[dest_l, jnp.where(keep, pos, per - 1)].set(
-                jnp.where(keep, v, 0))
+            buf = jnp.zeros((n_shards, per + 1), v.dtype)
+            buf = buf.at[dest_l, slot].set(
+                jnp.where(keep, v, 0))[:, :per]
             outs.append(jax.lax.all_to_all(buf, axis, 0, 0, tiled=False))
         vr = jax.lax.all_to_all(out_valid, axis, 0, 0, tiled=False)
-        return tuple(o.reshape(-1) for o in outs) + (vr.reshape(-1),)
+        return tuple(o.reshape(-1) for o in outs) + (vr.reshape(-1),
+                                                     overflow)
 
     names = list(cols)
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(axis),) * (1 + len(names)),
-                   out_specs=(P(axis),) * (len(names) + 1))
+                   out_specs=(P(axis),) * (len(names) + 1) + (P(),))
     res = fn(dest, *[cols[c] for c in names])
-    out = dict(zip(names, res[:-1]))
-    return out, res[-1]
+    out = dict(zip(names, res[:-2]))
+    return out, res[-2], res[-1]
 
 
 def broadcast_build_side(mesh: Mesh, axis: str,
@@ -69,7 +81,9 @@ def broadcast_build_side(mesh: Mesh, axis: str,
         return tuple(jax.lax.all_gather(v, axis, tiled=True) for v in vals)
 
     names = list(cols)
+    # check_rep=False: all_gather(tiled) output IS replicated, but the
+    # static replication checker cannot infer it on every jax version
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(axis),) * len(names),
-                   out_specs=(P(),) * len(names))
+                   out_specs=(P(),) * len(names), check_rep=False)
     return dict(zip(names, fn(*[cols[c] for c in names])))

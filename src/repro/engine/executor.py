@@ -212,6 +212,53 @@ def scan_stores_batched(db: VerticaDB, plan, need: Sequence[str],
                           pruned, total)
 
 
+def wos_visible(store, as_of: int
+                ) -> Optional[Tuple[Dict[str, np.ndarray], np.ndarray]]:
+    """(rows, visibility mask) of a store's WOS at a snapshot epoch, or
+    None when the WOS is empty: committed at-or-before ``as_of`` and not
+    deleted by then.  THE single definition of WOS MVCC visibility for
+    the execution paths -- the segmented and single-node pipelines must
+    agree on exactly these rows."""
+    data, eps, _ = store.wos.snapshot()
+    if not len(eps):
+        return None
+    dels = (np.concatenate(store.wos_delete_epochs)
+            if store.wos_delete_epochs
+            else np.zeros(len(eps), np.int64))
+    return data, (eps <= as_of) & ~((dels > 0) & (dels <= as_of))
+
+
+def snapshot_scan_host(db: VerticaDB, plan, need: Sequence[str],
+                       as_of: int, stats
+                       ) -> Optional[Tuple[Dict[str, np.ndarray],
+                                           np.ndarray]]:
+    """Host-side snapshot of every row behind ``plan.sources`` (ROS via
+    the device block cache, plus pending WOS rows), as flat numpy arrays
+    with a visibility mask.  This is the gather step of the segmented
+    executor (engine/segmented.py): partitioning rows onto mesh shards is
+    host work, so the columns come back as numpy, but the decode itself
+    still runs through the cached device blocks."""
+    need = sorted(set(need))
+    ros = scan_stores_batched(db, plan, need, None, None, as_of, stats)
+    parts: List[Dict[str, np.ndarray]] = []
+    valids: List[np.ndarray] = []
+    if ros is not None:
+        parts.append({c: np.asarray(v) for c, v in ros.columns.items()})
+        valids.append(np.asarray(ros.valid))
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        wos = wos_visible(store, as_of)
+        if wos is None:
+            continue
+        data, vis = wos
+        parts.append({c: np.asarray(data[c]) for c in need})
+        valids.append(vis)
+    if not parts:
+        return None
+    cols = {c: np.concatenate([p[c] for p in parts]) for c in need}
+    return cols, np.concatenate(valids)
+
+
 # ---------------------------------------------------------------------------
 # Fused scan -> joins -> predicate -> mask -> aggregate (one jitted program)
 # ---------------------------------------------------------------------------

@@ -93,19 +93,34 @@ class ExecStats:
     plan_cache: str = ""            # "hit" / "miss" / "" (not attempted)
     block_cache_hits: int = 0
     block_cache_misses: int = 0
+    # segmented-execution telemetry (engine/segmented.py)
+    segmented: bool = False
+    n_shards: int = 0
+    exchange: str = ""              # ";"-joined per-join exchange ops
+    reseg_overflow: int = 0         # tuples that hit a full exchange slot
 
 
 def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
-            plan=None) -> Tuple[Dict[str, np.ndarray], ExecStats]:
+            plan=None, mesh=None,
+            mesh_axis: str = "data"
+            ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
     """Run a logical plan (LogicalQuery, node tree, builder, or the legacy
     Query shim).  ``plan`` (from planner.plan_query) may be supplied;
-    otherwise the planner is invoked."""
+    otherwise the planner is invoked.
+
+    When a ``mesh`` is passed -- or the database has one attached
+    (``db.attach_mesh()``) -- aggregate queries route through the
+    segmented multi-device executor (engine/segmented.py) and fall back
+    here for shapes outside its subset."""
     from ..planner.planner import plan_query
 
     t0 = time.time()
     q = as_ir(q)
     if plan is None:
         plan = plan_query(db, q)
+    if mesh is None:
+        mesh = getattr(db, "mesh", None)
+        mesh_axis = getattr(db, "mesh_axis", mesh_axis)
     frontend_s = time.time() - t0
     stats = ExecStats(projection=plan.projection,
                       groupby_algorithm=plan.groupby_algorithm,
@@ -122,6 +137,14 @@ def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
         stats.block_cache_misses = bc.misses - bc_m0
         stats.wall_s = time.time() - t0
         return out, stats
+
+    # --- segmented multi-device path (explicit opt-in via mesh) ---
+    if mesh is not None:
+        from . import segmented
+        res = segmented.execute_segmented(db, q, plan, as_of, mesh,
+                                          mesh_axis, stats)
+        if res is not None:
+            return _finish(res)
 
     # --- scalar COUNT directly on RLE runs (predicate on sort leader) ---
     if plan.scalar_rle:
@@ -170,12 +193,9 @@ def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
     for host, owner in plan.sources:
         store = db.nodes[host].stores[owner]
         # WOS rows participate too (unencoded scan)
-        data, eps, _ = store.wos.snapshot()
-        if len(eps):
-            dels = (np.concatenate(store.wos_delete_epochs)
-                    if store.wos_delete_epochs
-                    else np.zeros(len(eps), np.int64))
-            vis = (eps <= as_of) & ~((dels > 0) & (dels <= as_of))
+        wos = fused_exec.wos_visible(store, as_of)
+        if wos is not None:
+            data, vis = wos
             cols = {c: jnp.asarray(data[c]) for c in need}
             valid = jnp.asarray(vis)
             if scan_pred is not None:

@@ -93,7 +93,9 @@ def selectivity(db: VerticaDB, proj: ProjectionDef,
 
 def join_distribution(db: VerticaDB, fact_proj: ProjectionDef,
                       fact_key: str, dim_table: str,
-                      dim_rows: int, dim_key: str = "") -> Tuple[str, float]:
+                      dim_rows: int, dim_key: str = "",
+                      placement: Optional[Tuple[str, ...]] = None
+                      ) -> Tuple[str, float]:
     """Pick co-located / broadcast / resegment and its NET cost (paper
     §6.2: 'optimizing queries to favor co-located joins where possible').
 
@@ -101,13 +103,22 @@ def join_distribution(db: VerticaDB, fact_proj: ProjectionDef,
       -> zero network.
     * broadcast: small dim -> all_gather of the build side.
     * resegment: both large -> all_to_all of the probe side.
+
+    ``placement`` is the probe side's *current* hash-segmentation columns
+    at the point this join runs -- the planner threads it through a join
+    chain because an earlier resegment changes it (a resegment on k1 makes
+    a later 'co-located on k2' claim false even when the stored projection
+    is segmented by k2); None means 'use the projection's stored
+    segmentation'.
     """
     dim_super = db.catalog.super_of(dim_table)
     fact_seg = fact_proj.segmentation
+    if placement is None:
+        placement = None if fact_seg.replicated else tuple(fact_seg.columns)
     if dim_super.segmentation.replicated:
         return "co-located (replicated dim)", 0.0
-    if (not fact_seg.replicated and fact_seg.columns == (fact_key,)
-            and dim_key and dim_super.segmentation.columns == (dim_key,)):
+    if (placement == (fact_key,) and dim_key
+            and dim_super.segmentation.columns == (dim_key,)):
         return "co-located (matching segmentation)", 0.0
     bcast_bytes = dim_rows * 16.0 * db.catalog.n_nodes
     fact_rows = sum(
@@ -117,3 +128,14 @@ def join_distribution(db: VerticaDB, fact_proj: ProjectionDef,
     if bcast_bytes <= reseg_bytes:
         return "broadcast", bcast_bytes / NET_BW
     return "resegment", reseg_bytes / NET_BW
+
+
+def resegment_capacity(dest_counts: np.ndarray, n_shards: int,
+                       pad_multiple: int = 8) -> int:
+    """Per-exchange static capacity for exchange.resegment: enough slots
+    on the fullest destination shard (rounded up), times n_shards.  Exact
+    when ``dest_counts`` comes from the actual destination histogram; the
+    caller still checks the reported overflow."""
+    per = int(max(int(np.max(dest_counts)) if len(dest_counts) else 0, 1))
+    per = -(-per // pad_multiple) * pad_multiple
+    return per * n_shards

@@ -32,6 +32,9 @@ class PhysicalPlan:
     scalar_rle: bool = False           # COUNT on RLE runs, zero decode
     join_strategy: str = ""            # "; "-joined per-join strategies
     join_strategies: Tuple[str, ...] = ()
+    # per-join exchange operator for the segmented executor
+    # (engine/segmented.py): "local" | "broadcast" | "resegment"
+    join_exchanges: Tuple[str, ...] = ()
     use_sip: bool = False              # any join armed with SIP
     sip_joins: Tuple[bool, ...] = ()   # per-join SIP decision
     # per-group-column dense domain estimates (None = unknown); the
@@ -106,15 +109,45 @@ def plan_query(db: VerticaDB, q) -> PhysicalPlan:
             if (host, owner_proj) not in plan.sources:
                 plan.sources.append((host, owner_proj))
 
-    # join strategy + SIP, one decision per join edge
-    strategies, sips = [], []
+    # join strategy + SIP + exchange op, one decision per join edge.  The
+    # probe side's *placement* (which columns its rows are currently
+    # hash-distributed by) starts at the projection's segmentation and is
+    # rewritten by every resegment, so a later join's co-location claim is
+    # judged against where the rows actually are, not where storage put
+    # them (paper §6.2 'favor co-located joins where possible').
+    placement = None if proj.segmentation.replicated \
+        else tuple(proj.segmentation.columns)
+    strategies, sips, exchanges = [], [], []
     for spec in q.joins:
         dim_rows = _dim_row_estimate(db, db.catalog.super_of(
             spec.dim_table))
         strat, net_s = cost_mod.join_distribution(
             db, proj, spec.fact_key, spec.dim_table, dim_rows,
-            dim_key=spec.dim_key)
+            dim_key=spec.dim_key, placement=placement)
+        if strat.startswith("co-located"):
+            exch = "local"
+        elif strat == "resegment":
+            if placement == (spec.fact_key,):
+                # an earlier resegment already placed the probe side by
+                # this key; the build side is placed by hash(dim_key)
+                # regardless of its stored segmentation, so the join is
+                # local now -- re-exchanging would be pure waste
+                exch = "local"
+                strat = "co-located (placement)"
+                net_s = 0.0
+            elif spec.fact_key in proj.columns:
+                exch = "resegment"
+                placement = (spec.fact_key,)
+            else:
+                # snowflake key: it only materializes after an earlier
+                # join, so the scan cannot compute its hash destination --
+                # replicate the build side instead
+                exch = "broadcast"
+                strat = "broadcast (snowflake key)"
+        else:
+            exch = "broadcast"
         strategies.append(strat)
+        exchanges.append(exch)
         est.net_s += net_s
         # SIP only pays when the build side actually filters (the paper's
         # predictability lesson: drop special cases that sometimes lose)
@@ -123,10 +156,11 @@ def plan_query(db: VerticaDB, q) -> PhysicalPlan:
         sips.append(spec.dim_predicate is not None
                     and spec.fact_key in proj.columns)
         plan.explain.append(
-            f"join {spec.dim_table} on {spec.fact_key}: {strat}, "
-            f"SIP={sips[-1]}")
+            f"join {spec.dim_table} on {spec.fact_key}: {strat} "
+            f"(exchange {exch}), SIP={sips[-1]}")
     plan.join_strategies = tuple(strategies)
     plan.join_strategy = "; ".join(strategies)
+    plan.join_exchanges = tuple(exchanges)
     plan.sip_joins = tuple(sips)
     plan.use_sip = any(sips)
 

@@ -38,8 +38,9 @@ n = 8192
 keys = jnp.asarray(rng.integers(0, 10_000, n), jnp.int32)
 vals = jnp.asarray(rng.normal(size=n), jnp.float32)
 dest = keys % 8
-out, valid = resegment(mesh, "data", {"k": keys, "v": vals}, dest,
-                       capacity=4 * n)
+out, valid, overflow = resegment(mesh, "data", {"k": keys, "v": vals},
+                                 dest, capacity=4 * n)
+assert int(np.asarray(overflow).sum()) == 0
 kept = np.asarray(out["k"])[np.asarray(valid)]
 assert sorted(kept.tolist()) == sorted(np.asarray(keys).tolist())
 # every row landed on its hash shard: shard i holds keys % 8 == i
