@@ -1,9 +1,15 @@
 """Quickstart: the Vertica-in-JAX analytic core in ~60 lines.
 
 Creates a 4-node cluster, loads a small star schema, and runs queries
-through the fluent builder front-end (engine/builder.py -> logical IR),
-showing projections, encodings, SMA pruning, snapshot isolation and
-K-safety. Run: PYTHONPATH=src python examples/quickstart.py
+through the fluent builder front-end (engine/builder.py -> logical IR)
+-- the primary API; the pre-IR ``Query``/``JoinSpec`` dataclasses
+survive only as deprecated shims (see engine/pipeline.py) -- showing
+projections, encodings, SMA pruning, snapshot isolation, trickle loads
+and K-safety with incremental recovery.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+(README.md carries a doc-tested copy of this flow, kept green by
+scripts/check_docs.py.)
 """
 import numpy as np
 
@@ -81,8 +87,22 @@ db.fail_node(2)
 out2 = q.collect()
 assert np.array_equal(np.sort(ref["cid"]), np.sort(out2["cid"]))
 print("node 2 down: identical results via buddy projection")
+
+# incremental recovery: rejoin first (the node receives new commits but
+# serves no reads), trickle-load meanwhile, then replay ONLY the epochs
+# missed while down -- adopting segment-aligned buddy containers wholesale
+db.rejoin_node(2)
+t = db.begin()
+db.insert(t, "sales", {"sale_id": np.arange(n, n + 100),
+                       "cid": np.full(100, 3, np.int64),
+                       "date": np.full(100, 2999, np.int64),
+                       "price": np.ones(100)})
+db.commit(t)                 # lands on node 2 live, no replay needed
 recover_node(db, 2)
-print("node 2 recovered (epoch-based incremental replay)")
+rec = db.nodes[2].last_recovery
+print(f"node 2 recovered: replayed {rec['replayed_rows']} rows up to "
+      f"epoch {rec['replay_hi']} ({rec['adopted_containers']} containers "
+      f"adopted wholesale from buddies)")
 
 # fast bulk delete: drop a whole partition (file unlink, no delete vectors)
 db.run_tuple_mover(force_moveout=True)

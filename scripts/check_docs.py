@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs-as-tests: extract fenced ``python`` code blocks from the repo's
+markdown docs and execute them, doctest-style.
+
+Every ```python block in README.md / DESIGN.md runs, in order, in one
+shared namespace per file (so a quickstart can build state across
+blocks).  A failure prints the offending file, block number and source
+line, then exits nonzero -- scripts/verify.sh runs this as its docs
+tier, so a quickstart snippet can never rot out from under the README.
+
+Blocks fenced as anything other than ``python`` (```text, ```bash, bare
+```) are documentation-only and skipped.
+
+Usage: python scripts/check_docs.py [files...]   (default: README.md DESIGN.md)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_FILES = ("README.md", "DESIGN.md")
+
+FENCE_RE = re.compile(
+    r"^```python[ \t]*\n(.*?)^```[ \t]*$", re.MULTILINE | re.DOTALL)
+
+
+def blocks_of(path: pathlib.Path):
+    """[(start_line, source), ...] for every ```python fence."""
+    text = path.read_text()
+    out = []
+    for m in FENCE_RE.finditer(text):
+        start_line = text[:m.start()].count("\n") + 2  # first code line
+        out.append((start_line, m.group(1)))
+    return out
+
+
+def run_file(path: pathlib.Path) -> int:
+    blocks = blocks_of(path)
+    if not blocks:
+        print(f"[check_docs] {path.name}: no python blocks")
+        return 0
+    ns = {"__name__": f"__docs_{path.stem}__", "__file__": str(path)}
+    for i, (line, src) in enumerate(blocks, 1):
+        t0 = time.time()
+        # compile with a filename that points back at the markdown so
+        # tracebacks are clickable; pad so line numbers match the doc
+        code = compile("\n" * (line - 1) + src, str(path), "exec")
+        try:
+            exec(code, ns)
+        except Exception:
+            print(f"[check_docs] FAIL {path.name} block {i} "
+                  f"(line {line}):", file=sys.stderr)
+            traceback.print_exc()
+            return 1
+        print(f"[check_docs] ok   {path.name} block {i} "
+              f"(line {line}, {time.time() - t0:.1f}s)")
+    return 0
+
+
+def main(argv) -> int:
+    sys.path.insert(0, str(REPO / "src"))
+    files = argv[1:] or DEFAULT_FILES
+    rc = 0
+    for f in files:
+        rc |= run_file(REPO / f)
+    if rc == 0:
+        print("[check_docs] all doc snippets green")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

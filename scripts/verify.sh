@@ -21,7 +21,11 @@ python -m pytest -q -x -p no:cacheprovider \
     tests/test_encodings.py \
     tests/test_segmentation_sma.py \
     tests/test_segmentation_props.py \
+    tests/test_crash_replay_props.py \
     tests/test_locks.py
+
+echo "== docs tier: README/DESIGN snippets must run green =="
+python scripts/check_docs.py
 
 echo "== segmented differential oracle (8-device CPU mesh) =="
 # a separate process: jax locks the device count at backend init, so the

@@ -33,11 +33,16 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, Iterable, Optional, Tuple
 
-CacheKey = Tuple[int, str, str]          # (container_id, column, kind)
+# (container_id, column, kind); container_id is an int for physical ROS
+# containers, or a string namespace for derived entries ("dim:<table>"
+# build sides, "seg:<projection>" partitioned slabs) whose column field
+# may itself be a structured tuple key
+CacheKey = Tuple[int, str, str]
 
 # entry kinds used by the executor
 KIND_ENCODED = "encoded"                  # dict of device payload arrays
 KIND_DECODED = "decoded"                  # (n_blocks, block_rows) device array
+KIND_SEG = "segmented"                    # per-shard partitioned scan slabs
 
 
 @dataclasses.dataclass
@@ -141,6 +146,29 @@ class BlockCache:
 
     def invalidate_containers(self, ids: Iterable[int]) -> int:
         return sum(self.invalidate_container(cid) for cid in ids)
+
+    def invalidate_where(self, container_id, pred) -> int:
+        """Drop the subset of one container-id's entries whose key
+        satisfies ``pred(key)`` -- precise invalidation for composite
+        entries (the segmented executor's ``seg:<projection>`` slabs key
+        each entry by the exact (container set, WOS state, epoch, mesh)
+        it was built from, so retiring ONE container evicts exactly the
+        slabs that referenced it, not the projection's whole slab set)."""
+        keys = self._by_container.get(container_id)
+        if not keys:
+            return 0
+        dead = [k for k in keys if pred(k)]
+        n = 0
+        for key in dead:
+            keys.discard(key)
+            ent = self._entries.pop(key, None)
+            if ent is not None:
+                self.stats.bytes_in_use -= ent[1]
+                self.stats.invalidations += 1
+                n += 1
+        if not keys:
+            self._by_container.pop(container_id, None)
+        return n
 
     def clear(self):
         self._entries.clear()

@@ -53,6 +53,16 @@ class NodeState:
         default_factory=dict)
     # commits missed while down (drives recovery)
     stale_since: Optional[int] = None
+    # rejoined but not yet recovered: the node RECEIVES new commits (so it
+    # stops falling further behind) but serves no reads -- the planner
+    # routes its segments to the buddy until recover_node() completes
+    recovering: bool = False
+    rejoin_epoch: Optional[int] = None
+    # incremental-recovery telemetry (core/recovery.py)
+    last_recovery: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def serving(self) -> bool:
+        return self.up and not self.recovering
 
 
 @dataclasses.dataclass
@@ -62,6 +72,11 @@ class Txn:
     staged: Dict[Tuple[str, int], Dict[str, np.ndarray]] = \
         dataclasses.field(default_factory=dict)
     staged_segments: Dict[Tuple[str, int], np.ndarray] = \
+        dataclasses.field(default_factory=dict)
+    # (projection, node) -> segmentation ring value per staged row (None
+    # for replicated projections); stamped onto the WOS at commit so the
+    # segmented executor slabs trickle loads per device shard directly
+    staged_rings: Dict[Tuple[str, int], Optional[np.ndarray]] = \
         dataclasses.field(default_factory=dict)
     deletes: List[Tuple[str, Callable]] = dataclasses.field(
         default_factory=list)
@@ -174,14 +189,14 @@ class VerticaDB:
                 sel_all = np.ones(n, bool)
                 for node_id, segs in placements:
                     self._stage(txn, proj.name, node_id, pdata, sel_all,
-                                segs)
+                                segs, None)
             else:
-                nodes, segs = proj.segmentation.place(
+                nodes, segs, ring = proj.segmentation.place_with_ring(
                     pdata, self.catalog.n_nodes)
                 for node_id in np.unique(nodes):
                     sel = nodes == node_id
                     self._stage(txn, proj.name, int(node_id), pdata, sel,
-                                segs[sel])
+                                segs[sel], ring[sel])
 
     def _project_rows(self, proj: ProjectionDef,
                       data: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
@@ -205,7 +220,7 @@ class VerticaDB:
 
     def _stage(self, txn: Txn, proj: str, node_id: int,
                data: Dict[str, np.ndarray], sel: np.ndarray,
-               segs: np.ndarray):
+               segs: np.ndarray, ring: Optional[np.ndarray]):
         key = (proj, node_id)
         sub = {c: v[sel] for c, v in data.items()}
         if key in txn.staged:
@@ -213,9 +228,13 @@ class VerticaDB:
                                                   sub[c]]) for c in sub}
             txn.staged_segments[key] = np.concatenate(
                 [txn.staged_segments[key], segs])
+            prev = txn.staged_rings[key]
+            txn.staged_rings[key] = None if prev is None or ring is None \
+                else np.concatenate([prev, ring])
         else:
             txn.staged[key] = sub
             txn.staged_segments[key] = segs
+            txn.staged_rings[key] = ring
 
     def delete(self, txn: Txn, table: str,
                predicate: Callable[[Dict[str, np.ndarray]], np.ndarray]):
@@ -258,10 +277,11 @@ class VerticaDB:
                 continue  # node missed the commit; recovery will replay
             store = node.stores[proj_name]
             segs = txn.staged_segments[(proj_name, node_id)]
+            ring = txn.staged_rings.get((proj_name, node_id))
             if txn.direct_to_ros:
                 self._direct_ros(store, data, epoch, segs)
             else:
-                store.wos.append(data, epoch, segs)
+                store.wos.append(data, epoch, segs, ring=ring)
                 n = len(segs)
                 store.wos_delete_epochs.append(np.zeros(n, np.int64))
         self.locks.release_all(txn.id)
@@ -269,6 +289,8 @@ class VerticaDB:
 
     def rollback(self, txn: Txn):
         txn.staged.clear()
+        txn.staged_segments.clear()
+        txn.staged_rings.clear()
         txn.deletes.clear()
         self.locks.release_all(txn.id)
 
@@ -287,6 +309,10 @@ class VerticaDB:
         for c in new:
             if c.id in tmp.delete_vectors:
                 store.delete_vectors[c.id] = tmp.delete_vectors[c.id]
+        if new:
+            # slabs built before this bulk load never match again (the
+            # container set grew): free their HBM now, precisely
+            store.invalidate_seg_slabs(require_ids=[c.id for c in new])
 
     def _apply_delete(self, table: str, predicate, epoch: int):
         for proj in self.catalog.projections_of(table):
@@ -332,13 +358,15 @@ class VerticaDB:
         buddy_name = proj.name + "_b1"
         buddy = self.catalog.projections.get(buddy_name)
         for seg_node in range(self.catalog.n_nodes):
-            if self.nodes[seg_node].up:
+            # a recovering node receives commits but serves no reads: its
+            # segments route to the buddy until recover_node() completes
+            if self.nodes[seg_node].serving():
                 owners[seg_node] = proj.name
             elif buddy is not None:
                 # the buddy stores segment s on node (s + offset) % N
                 host = (seg_node + buddy.segmentation.offset) % \
                     self.catalog.n_nodes
-                if self.nodes[host].up:
+                if self.nodes[host].serving():
                     owners[seg_node] = buddy_name
                 else:
                     raise AvailabilityError(
@@ -357,7 +385,10 @@ class VerticaDB:
         proj = self.catalog.projections[proj_name]
         as_of = as_of if as_of is not None else self.epochs.latest_queryable()
         if proj.segmentation.replicated:
-            first_up = next(n.id for n in self.nodes if n.up)
+            first_up = next((n.id for n in self.nodes if n.serving()), None)
+            if first_up is None:
+                raise AvailabilityError(
+                    f"no serving replica of {proj_name}")
             sources = [(first_up, proj_name)]
         else:
             owners = self.segment_owners(proj)
@@ -407,11 +438,15 @@ class VerticaDB:
 
     # ----------------------------------------------- maintenance / ops --
 
-    def run_tuple_mover(self, *, force_moveout: bool = False):
+    def run_tuple_mover(self, *, force_moveout: bool = False,
+                        do_mergeout: bool = True):
         stats = {"moveouts": 0, "mergeouts": 0}
-        any_down = any(not n.up for n in self.nodes)
+        # recovering nodes count as down here: their LGE must not advance
+        # (they are still missing history) and the AHM must keep the
+        # epochs they will replay
+        any_down = any(not n.serving() for n in self.nodes)
         for node in self.nodes:
-            if not node.up:
+            if not node.serving():
                 continue
             for store in node.stores.values():
                 entry = self.catalog.tables[store.proj.anchor]
@@ -422,7 +457,8 @@ class VerticaDB:
                         ahm=self.epochs.ahm,
                         partition_expr=entry.partition_expr,
                         wos_row_limit=0 if force_moveout else 8192,
-                        block_rows=self.block_rows)
+                        block_rows=self.block_rows,
+                        do_mergeout=do_mergeout)
                     stats["moveouts"] += s["moveouts"]
                     stats["mergeouts"] += s["mergeouts"]
                 finally:
@@ -451,12 +487,13 @@ class VerticaDB:
                     store.containers = [c for c in store.containers
                                         if c.partition_key != partition_key]
                     store.invalidate_cached([c.id for c in drop])
+                    # evict exactly the partitioned scan slabs that
+                    # referenced a dropped container (keys carry the
+                    # container-id set) -- other epochs/meshes stay warm
+                    store.invalidate_seg_slabs(
+                        retired_ids=[c.id for c in drop])
                     for c in drop:
                         store.delete_vectors.pop(c.id, None)
-                # the segmented executor's partitioned scan slabs span
-                # containers; their keys track the live container-id set,
-                # but evict eagerly so dead slabs don't hold HBM budget
-                self.block_cache.invalidate_container(f"seg:{proj.name}")
             # dropping containers bypasses MVCC: cached join build sides
             # of this table (engine/executor.py) are stale at EVERY epoch
             self.block_cache.invalidate_container(f"dim:{table}")
@@ -468,10 +505,34 @@ class VerticaDB:
         if not node.up:
             return
         node.up = False
+        node.recovering = False
+        node.rejoin_epoch = None
         node.stale_since = self.epochs.latest_queryable()
         for store in node.stores.values():
             store.wos.clear()          # WOS is memory: lost on failure
             store.wos_delete_epochs = []
+
+    def rejoin_node(self, node_id: int):
+        """Bring a failed node back ONLINE but not yet SERVING: it starts
+        receiving new commits immediately (so it stops falling behind)
+        while reads keep routing to its buddy; ``recovery.recover_node``
+        then replays only the epochs it missed while down
+        (LGE, rejoin_epoch] and flips it back to serving (paper §4.4)."""
+        from .recovery import rejoin_node
+        return rejoin_node(self, node_id)
+
+    # epoch ceilings: the newest epoch that can affect a store's (or a
+    # table's) visible state.  Epoch-keyed caches clamp a query's as-of to
+    # this ceiling, so trickle-load commits elsewhere in the cluster do
+    # not invalidate entries whose underlying data did not change.
+
+    def table_epoch_ceiling(self, table: str, *,
+                            include_wos: bool = True) -> int:
+        proj = self.catalog.super_of(table)
+        return max((node.stores[proj.name].epoch_ceiling(
+            include_wos=include_wos)
+            for node in self.nodes if proj.name in node.stores),
+            default=0)
 
     def storage_report(self) -> Dict[str, Dict[str, float]]:
         out = {}

@@ -27,11 +27,14 @@ from .tuple_mover import ProjectionStore
 
 
 def _rows_with_delete_epochs(db: VerticaDB, store: ProjectionStore,
-                             lo: int, hi: int):
+                             lo: int, hi: int, skip_ids=frozenset()):
     """All rows (incl. deleted ones) with commit epoch in (lo, hi], plus
-    their delete epochs -- the replay stream."""
+    their delete epochs -- the replay stream.  ``skip_ids`` excludes
+    containers already copied wholesale by incremental recovery."""
     parts, dparts, eparts = [], [], []
     for c in store.containers:
+        if c.id in skip_ids:
+            continue
         sel = (c.epochs > lo) & (c.epochs <= hi)
         if sel.any():
             rows = c.decode_all()
@@ -81,6 +84,8 @@ def _install_rows(db: VerticaDB, store: ProjectionStore, node_id: int,
     for c in new:
         if c.id in tmp.delete_vectors:
             store.delete_vectors[c.id] = tmp.delete_vectors[c.id]
+    if new:
+        store.invalidate_seg_slabs(require_ids=[c.id for c in new])
 
 
 def _truncate_past(db: VerticaDB, store: ProjectionStore, epoch: int):
@@ -118,6 +123,7 @@ def _truncate_past(db: VerticaDB, store: ProjectionStore, epoch: int):
                 nc.id, dpos, dels[sel][dpos]).to_ros()]
     retired = {c.id for c in store.containers} - {c.id for c in kept}
     store.invalidate_cached(retired)   # truncation retires containers
+    store.invalidate_seg_slabs(retired_ids=retired)
     store.containers = kept
 
 
@@ -169,47 +175,135 @@ def _replay_deletes(db: VerticaDB, store: ProjectionStore,
                                    np.asarray(eps, np.int64)).to_ros())
 
 
-def recover_node(db: VerticaDB, node_id: int, *,
-                 historical_lag: int = 1) -> Dict[str, int]:
-    """Rejoin a failed node. Returns rows replayed per projection."""
+def rejoin_node(db: VerticaDB, node_id: int) -> Optional[int]:
+    """Phase 0 of incremental recovery: bring a failed node back online
+    *without* serving reads.  Its ROS is truncated back to the LGE (the
+    WOS was already lost with the failure), and from here on it receives
+    every new commit -- so the epoch range it must later replay is frozen
+    at (LGE, rejoin_epoch] no matter how long recovery takes or how many
+    trickle loads land meanwhile.  Reads keep routing to the buddy
+    (``NodeState.serving``) until ``recover_node`` completes."""
     node = db.nodes[node_id]
     if node.up:
+        return node.rejoin_epoch
+    node.up = True
+    node.recovering = True
+    node.rejoin_epoch = db.epochs.latest_queryable()
+    for proj_name, store in node.stores.items():
+        _truncate_past(db, store, db.epochs.get_lge(proj_name, node_id))
+    return node.rejoin_epoch
+
+
+def _copy_epoch_range(db: VerticaDB, store: ProjectionStore,
+                      src: ProjectionStore, node_id: int,
+                      lo: int, hi: int) -> Tuple[int, int]:
+    """Replay commits in (lo, hi] from the buddy.  Buddy containers are
+    segment-aligned with the recovering store (same ring sub-range, same
+    sort order -- a buddy host holds exactly the primary segment of the
+    recovering node), so any container wholly inside the epoch window is
+    adopted WHOLESALE: a fresh-id clone sharing the encoded payloads and
+    its delete vectors, zero decode/sort/encode (paper §4.4 'simply
+    copies whole ROS containers and their delete vectors').  Only rows in
+    containers straddling the window boundary replay row-wise.  Returns
+    (containers adopted, rows installed)."""
+    if hi <= lo:
+        return 0, 0
+    adopted_ids = set()
+    rows = 0
+    for c in src.containers:
+        if c.n_rows == 0:
+            continue
+        if not ((c.epochs > lo).all() and (c.epochs <= hi).all()):
+            continue
+        nc = c.clone(projection=store.proj.name)
+        store.containers.append(nc)
+        for dv in src.delete_vectors.get(c.id, []):
+            store.delete_vectors.setdefault(nc.id, []).append(
+                DeleteVector.build(nc.id, dv.positions,
+                                   dv.delete_epochs).to_ros())
+        adopted_ids.add(c.id)
+        rows += c.n_rows
+    stream = _rows_with_delete_epochs(db, src, lo, hi,
+                                      skip_ids=adopted_ids)
+    if stream:
+        _install_rows(db, store, node_id, *stream)
+        rows += len(stream[1])
+    return len(adopted_ids), rows
+
+
+def recover_node(db: VerticaDB, node_id: int, *,
+                 historical_lag: int = 1) -> Dict[str, int]:
+    """Recover a failed or rejoined node incrementally: replay ONLY the
+    epochs it missed while down, (LGE, rejoin_epoch], from the buddy --
+    commits after the rejoin already landed on it live.  Returns rows
+    replayed per projection; adoption/replay counts land in
+    ``node.last_recovery``."""
+    node = db.nodes[node_id]
+    if node.up and not node.recovering:
         return {}
-    replayed: Dict[str, int] = {}
+    if not node.up:                     # direct call: rejoin now
+        rejoin_node(db, node_id)
+    e_join = node.rejoin_epoch
     current = db.epochs.latest_queryable()
+    replayed: Dict[str, int] = {}
+    adopted_total = 0
+    complete = True
     for proj_name, store in node.stores.items():
         proj = db.catalog.projections[proj_name]
         lge = db.epochs.get_lge(proj_name, node_id)
         # the historical/current boundary must never fall below the LGE or
         # the current phase would re-install rows the node already has
-        e_h = max(lge, current - historical_lag)
-        _truncate_past(db, store, lge)
+        e_h = max(lge, e_join - historical_lag)
         src = _buddy_source(db, proj, node_id)
         if src is None:
+            # no live replay source.  With K=0 (no buddy exists) there is
+            # nothing to ever replay from -- proceed.  But if a buddy
+            # EXISTS and is merely down/recovering, going back to serving
+            # now would silently drop every epoch in (LGE, rejoin]: stay
+            # in recovering state so a later recover_node can retry.
+            if lge < e_join and _replay_source_exists(db, proj):
+                complete = False
             continue
         # historical phase: (LGE, e_h], no locks
         total = 0
-        stream = _rows_with_delete_epochs(db, src, lge, e_h)
-        if stream:
-            _install_rows(db, store, node_id, *stream)
-            total += len(stream[1])
+        a, r = _copy_epoch_range(db, store, src, node_id, lge, e_h)
+        adopted_total += a
+        total += r
         _replay_deletes(db, store, src, lge, e_h, node_id)
         db.epochs.set_lge(proj_name, node_id, e_h)
-        # current phase: (e_h, current] under a Shared lock
+        # current phase: (e_h, rejoin] under a Shared lock; deletes replay
+        # through `current` -- a delete committed while the node was
+        # recovering targeted rows it did not have yet
         db.locks.acquire(proj.anchor, f"recover-{node_id}", "S")
         try:
-            stream = _rows_with_delete_epochs(db, src, e_h, current)
-            if stream:
-                _install_rows(db, store, node_id, *stream)
-                total += len(stream[1])
+            a, r = _copy_epoch_range(db, store, src, node_id, e_h, e_join)
+            adopted_total += a
+            total += r
             _replay_deletes(db, store, src, e_h, current, node_id)
-            db.epochs.set_lge(proj_name, node_id, current)
+            db.epochs.set_lge(proj_name, node_id, e_join)
         finally:
             db.locks.release_all(f"recover-{node_id}")
         replayed[proj_name] = total
-    node.up = True
-    node.stale_since = None
+    node.last_recovery = {"adopted_containers": adopted_total,
+                          "replayed_rows": sum(replayed.values()),
+                          "replay_hi": e_join,
+                          "complete": complete}
+    if complete:
+        node.recovering = False
+        node.rejoin_epoch = None
+        node.stale_since = None
     return replayed
+
+
+def _replay_source_exists(db: VerticaDB, proj: ProjectionDef) -> bool:
+    """Whether a replay source for this projection exists AT ALL (live or
+    not) -- distinguishes 'buddy temporarily unavailable' (recovery must
+    wait) from K=0 'no buddy was ever kept' (nothing to replay from)."""
+    if proj.segmentation.replicated:
+        return db.catalog.n_nodes > 1
+    if proj.buddy_of is not None:
+        return True
+    return (proj.name + "_b1") in db.catalog.projections
 
 
 def _buddy_source(db: VerticaDB, proj: ProjectionDef,
@@ -219,23 +313,22 @@ def _buddy_source(db: VerticaDB, proj: ProjectionDef,
     primary's)."""
     if proj.segmentation.replicated:
         for n in db.nodes:
-            if n.up and n.id != node_id:
+            if n.serving() and n.id != node_id:
                 return n.stores[proj.name]
         return None
     if proj.buddy_of is not None:
         primary = db.catalog.projections[proj.buddy_of]
-        host = (node_id - proj.segmentation.offset) % db.catalog.n_nodes
         # rows this buddy-node stores = primary segment of (node - offset)
         src_node = db.nodes[(node_id - proj.segmentation.offset)
                             % db.catalog.n_nodes]
-        if src_node.up:
+        if src_node.serving():
             return src_node.stores[primary.name]
         return None
     buddy = db.catalog.projections.get(proj.name + "_b1")
     if buddy is None:
         return None
     host = (node_id + buddy.segmentation.offset) % db.catalog.n_nodes
-    if db.nodes[host].up:
+    if db.nodes[host].serving():
         return db.nodes[host].stores[buddy.name]
     return None
 

@@ -79,10 +79,20 @@ class SegmentationSpec:
               n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
         """(node, local_segment) per row; replicated raises (caller fans
         out to every node instead)."""
+        nodes, segs, _ = self.place_with_ring(data, n_nodes)
+        return nodes, segs
+
+    def place_with_ring(self, data: Dict[str, np.ndarray], n_nodes: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(node, local_segment, ring) per row.  The ring value is the
+        mesh-independent ownership coordinate: stores stamp it onto WOS
+        batches at commit so the segmented executor can re-derive *device*
+        shard ownership (shard_of) for any mesh width without re-hashing
+        the segmentation columns."""
         assert not self.replicated
         ring = self.ring_values(data)
-        return self.node_of(ring, n_nodes), self.local_segment_of(ring,
-                                                                  n_nodes)
+        return (self.node_of(ring, n_nodes),
+                self.local_segment_of(ring, n_nodes), ring)
 
 
 def rebalance_plan(n_old: int, n_new: int,

@@ -37,6 +37,7 @@ class ROSContainer:
     n_rows: int
     partition_key: Optional[int] = None
     local_segment: int = 0
+    _max_epoch: Optional[int] = None     # lazy cache, see max_epoch()
 
     @staticmethod
     def build(proj: ProjectionDef, data: Dict[str, np.ndarray],
@@ -72,6 +73,25 @@ class ROSContainer:
 
     def decode_all(self) -> Dict[str, np.ndarray]:
         return {c: col.decode() for c, col in self.columns.items()}
+
+    def max_epoch(self) -> int:
+        """Newest commit epoch in this container (cached: the container is
+        immutable).  Epoch-keyed caches use it to clamp a query's as-of to
+        the newest epoch that can affect ROS visibility."""
+        if self._max_epoch is None:
+            self._max_epoch = int(self.epochs.max()) if self.n_rows else 0
+        return self._max_epoch
+
+    def clone(self, projection: Optional[str] = None) -> "ROSContainer":
+        """A fresh-id copy sharing the (immutable) encoded columns, SMAs
+        and epochs -- the paper's 'simply copies whole ROS containers'
+        recovery path and the backup hard-link trick: no decode, no
+        re-sort, no re-encode.  The new id keeps per-store cache identity
+        (retiring the copy never invalidates the original's entries)."""
+        return dataclasses.replace(
+            self, id=next(_next_container_id),
+            projection=projection if projection is not None
+            else self.projection)
 
 
 @dataclasses.dataclass
@@ -112,20 +132,33 @@ class WOS:
     """In-memory write-optimized store for one projection segment.
 
     Unencoded (paper: 'data is not encoded or compressed in the WOS'), but
-    already segmented. Buffers inserts until moveout."""
+    already segmented: each appended batch carries its local segment AND
+    its segmentation *ring* value, so the segmented executor
+    (engine/segmented.py) can slab trickle-loaded rows per device shard
+    (core/segmentation.shard_of) without re-hashing the segmentation
+    columns at query time.  Buffers inserts until moveout."""
 
     projection: str
     data: Dict[str, List[np.ndarray]] = dataclasses.field(
         default_factory=dict)
     epochs: List[np.ndarray] = dataclasses.field(default_factory=list)
     local_segments: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # per-batch ring values (uint64, core/segmentation.hash_columns), or
+    # None for batches of replicated projections / legacy callers
+    rings: List[Optional[np.ndarray]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def n_rows(self) -> int:
         return int(sum(len(e) for e in self.epochs))
 
+    def max_epoch(self) -> int:
+        return int(max((int(e.max()) for e in self.epochs if len(e)),
+                       default=0))
+
     def append(self, data: Dict[str, np.ndarray], epoch_or_epochs,
-               local_segment: np.ndarray):
+               local_segment: np.ndarray,
+               ring: Optional[np.ndarray] = None):
         n = len(next(iter(data.values()))) if data else 0
         if n == 0:
             return
@@ -136,6 +169,8 @@ class WOS:
             e = np.full(n, int(e), np.int64)
         self.epochs.append(e.astype(np.int64))
         self.local_segments.append(np.asarray(local_segment, np.int32))
+        self.rings.append(None if ring is None
+                          else np.asarray(ring, np.uint64))
 
     def snapshot(self) -> Tuple[Dict[str, np.ndarray], np.ndarray,
                                 np.ndarray]:
@@ -145,16 +180,28 @@ class WOS:
         return data, np.concatenate(self.epochs), \
             np.concatenate(self.local_segments)
 
+    def ring_snapshot(self) -> Optional[np.ndarray]:
+        """Ring values aligned with ``snapshot()`` row order, or None when
+        any batch was appended untagged (caller re-hashes)."""
+        if not self.epochs:
+            return np.zeros(0, np.uint64)
+        if any(r is None for r in self.rings):
+            return None
+        return np.concatenate(self.rings)
+
     def truncate_after(self, epoch: int):
         """Drop rows committed after ``epoch`` (recovery: back to LGE)."""
         data, eps, segs = self.snapshot()
+        rings = self.ring_snapshot()
         keep = eps <= epoch
         self.data = {c: [v[keep]] for c, v in data.items()}
         self.epochs = [eps[keep]]
         self.local_segments = [segs[keep]]
+        self.rings = [None if rings is None else rings[keep]]
 
     def clear(self):
         self.data, self.epochs, self.local_segments = {}, [], []
+        self.rings = []
 
     def memory_bytes(self) -> float:
         return sum(v.nbytes for arrs in self.data.values() for v in arrs)

@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .block_cache import BlockCache
+from .block_cache import BlockCache, KIND_SEG
 from .projection import ProjectionDef
 from .storage import DeleteVector, ROSContainer, WOS
 from .types import SQLType
@@ -54,8 +54,76 @@ class ProjectionStore:
         if self.cache is not None:
             self.cache.invalidate_containers(container_ids)
 
+    def invalidate_seg_slabs(self, retired_ids=(), require_ids=()) -> int:
+        """Precise invalidation of the segmented executor's partitioned
+        scan slabs (``seg:<projection>`` / KIND_SEG).  Each slab key
+        carries the exact container-id set it was built from, so we evict
+        exactly the slabs that referenced a retired container
+        (``retired_ids``: mergeout, truncate, drop_partition) or that
+        predate a moveout (``require_ids``: every post-moveout lookup
+        includes the new containers, so slabs without them are
+        unreachable garbage holding HBM) -- never the projection's whole
+        slab set, and never slabs of other (epoch, mesh, container-set)
+        combinations that are still live."""
+        if self.cache is None:
+            return 0
+        retired, required = set(retired_ids), set(require_ids)
+        if not retired and not required:
+            return 0
+
+        def dead(key) -> bool:
+            _, col, kind = key
+            if kind != KIND_SEG:
+                return False
+            if not (isinstance(col, tuple) and len(col) >= 3
+                    and isinstance(col[1], frozenset)):
+                return True          # unknown key shape: evict, stay safe
+            if retired & col[1]:     # container ids are globally unique
+                return True
+            if required:
+                # post-moveout staleness is per-STORE: only entries that
+                # sourced THIS projection's stores and predate the new
+                # containers are unreachable; entries built purely from
+                # other stores (e.g. buddy routing) stay live
+                try:
+                    items = col[2][0]
+                except (TypeError, IndexError):
+                    return True
+                for _host, owner, ids in items:
+                    if owner == self.proj.name \
+                            and not (required & set(ids)):
+                        return True
+            return False
+
+        # slabs are namespaced by the PRIMARY projection the planner
+        # chose (buddies are never plan candidates), so a buddy store's
+        # containers live under its primary's namespace
+        primary = self.proj.buddy_of or self.proj.name
+        return self.cache.invalidate_where(f"seg:{primary}", dead)
+
     def ros_rows(self) -> int:
         return sum(c.n_rows for c in self.containers)
+
+    def epoch_ceiling(self, *, include_wos: bool = True) -> int:
+        """Newest epoch affecting this store's visible state: container
+        commit epochs, delete-vector epochs and (optionally) WOS rows.
+        Visibility at any as-of >= ceiling equals visibility at the
+        ceiling, so epoch-keyed caches clamp to it -- a trickle commit
+        that only touched OTHER stores advances the cluster epoch without
+        invalidating this store's cached scans."""
+        hi = 0
+        for c in self.containers:
+            hi = max(hi, c.max_epoch())
+        for dvs in self.delete_vectors.values():
+            for dv in dvs:
+                if len(dv.delete_epochs):
+                    hi = max(hi, int(dv.delete_epochs.max()))
+        if include_wos:
+            hi = max(hi, self.wos.max_epoch())
+            for de in self.wos_delete_epochs:
+                if len(de):
+                    hi = max(hi, int(de.max()))
+        return hi
 
     def deleted_mask(self, c: ROSContainer,
                      as_of: Optional[int] = None) -> np.ndarray:
@@ -125,6 +193,10 @@ def moveout(store: ProjectionStore, *, sql_types: Dict[str, SQLType],
                     DeleteVector.build(c.id, dpos, sub_del[dpos]).to_ros())
     store.wos.clear()
     store.wos_delete_epochs = []
+    if new:
+        # post-moveout slab lookups always include the new containers:
+        # slabs built before this drain are unreachable -- evict precisely
+        store.invalidate_seg_slabs(require_ids=[c.id for c in new])
     return new
 
 
@@ -187,6 +259,7 @@ def mergeout(store: ProjectionStore, *, sql_types: Dict[str, SQLType],
     ids = {c.id for c in cand}
     store.containers = [c for c in store.containers if c.id not in ids]
     store.invalidate_cached(ids)   # merged-away containers are retired
+    store.invalidate_seg_slabs(retired_ids=ids)
     for cid in ids:
         store.delete_vectors.pop(cid, None)
     store.containers.append(merged)
@@ -199,15 +272,18 @@ def mergeout(store: ProjectionStore, *, sql_types: Dict[str, SQLType],
 
 def run_tuple_mover(store: ProjectionStore, *, sql_types, ahm,
                     partition_expr=None, wos_row_limit: int = 8192,
-                    block_rows: int = 4096) -> Dict[str, int]:
-    """Policy loop: moveout when the WOS is saturated, then mergeout until
-    no stratum has >= 2 containers (or caps block further merging)."""
+                    block_rows: int = 4096,
+                    do_mergeout: bool = True) -> Dict[str, int]:
+    """Policy loop: moveout when the WOS is saturated, then (unless
+    ``do_mergeout=False`` -- moveout and mergeout are independent
+    services, paper §4) mergeout until no stratum has >= 2 containers
+    (or caps block further merging)."""
     stats = {"moveouts": 0, "mergeouts": 0}
     if store.wos.n_rows >= wos_row_limit:
         if moveout(store, sql_types=sql_types, ahm=ahm,
                    partition_expr=partition_expr, block_rows=block_rows):
             stats["moveouts"] += 1
-    while mergeout(store, sql_types=sql_types, ahm=ahm,
-                   block_rows=block_rows) is not None:
+    while do_mergeout and mergeout(store, sql_types=sql_types, ahm=ahm,
+                                   block_rows=block_rows) is not None:
         stats["mergeouts"] += 1
     return stats

@@ -137,16 +137,32 @@ def _valid_blocks_np(store, c: ROSContainer, as_of: int,
     return valid
 
 
+def _container_ceiling(store, c: ROSContainer) -> int:
+    """Newest epoch affecting this container's visibility (commit epochs
+    + its delete-vector epochs).  Visibility at any as-of >= ceiling
+    equals visibility at the ceiling."""
+    hi = c.max_epoch()
+    for dv in store.delete_vectors.get(c.id, []):
+        if len(dv.delete_epochs):
+            hi = max(hi, int(dv.delete_epochs.max()))
+    return hi
+
+
 def cached_valid(cache: Optional[BlockCache], store, c: ROSContainer,
                  as_of: int, counts: np.ndarray) -> jax.Array:
     """Device copy of the container's visibility blocks at ``as_of``.
-    Keyed by epoch: a commit advances the epoch and naturally misses; a
-    delete additionally invalidates the container's entries outright."""
+    Keyed by the *effective* epoch -- as-of clamped to the container's
+    epoch ceiling -- so trickle-load commits that only touched the WOS
+    (or other stores) keep every container's visibility entry warm; a
+    commit or delete hitting THIS container moves its ceiling and misses
+    naturally (a delete additionally invalidates the container's entries
+    outright)."""
+    eff = min(as_of, _container_ceiling(store, c))
     if cache is None:
-        return jnp.asarray(_valid_blocks_np(store, c, as_of, counts))
+        return jnp.asarray(_valid_blocks_np(store, c, eff, counts))
     return cache.get_or_put(
-        c.id, f"@{as_of}", KIND_VALID,
-        lambda: jnp.asarray(_valid_blocks_np(store, c, as_of, counts)),
+        c.id, f"@{eff}", KIND_VALID,
+        lambda: jnp.asarray(_valid_blocks_np(store, c, eff, counts)),
         device_bytes)
 
 
@@ -228,23 +244,19 @@ def wos_visible(store, as_of: int
     return data, (eps <= as_of) & ~((dels > 0) & (dels <= as_of))
 
 
-def snapshot_scan_host(db: VerticaDB, plan, need: Sequence[str],
-                       as_of: int, stats
-                       ) -> Optional[Tuple[Dict[str, np.ndarray],
-                                           np.ndarray]]:
-    """Host-side snapshot of every row behind ``plan.sources`` (ROS via
-    the device block cache, plus pending WOS rows), as flat numpy arrays
-    with a visibility mask.  This is the gather step of the segmented
-    executor (engine/segmented.py): partitioning rows onto mesh shards is
-    host work, so the columns come back as numpy, but the decode itself
-    still runs through the cached device blocks."""
+def wos_scan_host(db: VerticaDB, plan, need: Sequence[str], as_of: int
+                  ) -> Optional[Tuple[Dict[str, np.ndarray], np.ndarray,
+                                      Optional[np.ndarray]]]:
+    """(cols, visibility, ring-values-or-None) of every pending WOS row
+    behind ``plan.sources``.  Ring values were stamped at commit
+    (core/database._stage -> WOS.append), so the segmented executor can
+    place trickle-loaded rows on their owning device shard without
+    re-hashing; None means some batch was untagged (caller re-hashes)."""
     need = sorted(set(need))
-    ros = scan_stores_batched(db, plan, need, None, None, as_of, stats)
     parts: List[Dict[str, np.ndarray]] = []
     valids: List[np.ndarray] = []
-    if ros is not None:
-        parts.append({c: np.asarray(v) for c, v in ros.columns.items()})
-        valids.append(np.asarray(ros.valid))
+    rings: List[Optional[np.ndarray]] = []
+    tagged = True
     for host, owner in plan.sources:
         store = db.nodes[host].stores[owner]
         wos = wos_visible(store, as_of)
@@ -253,6 +265,39 @@ def snapshot_scan_host(db: VerticaDB, plan, need: Sequence[str],
         data, vis = wos
         parts.append({c: np.asarray(data[c]) for c in need})
         valids.append(vis)
+        r = store.wos.ring_snapshot()
+        tagged &= r is not None
+        rings.append(r)
+    if not parts:
+        return None
+    cols = {c: np.concatenate([p[c] for p in parts]) for c in need}
+    ring = np.concatenate(rings) if tagged else None
+    return cols, np.concatenate(valids), ring
+
+
+def snapshot_scan_host(db: VerticaDB, plan, need: Sequence[str],
+                       as_of: int, stats, *, include_wos: bool = True
+                       ) -> Optional[Tuple[Dict[str, np.ndarray],
+                                           np.ndarray]]:
+    """Host-side snapshot of every row behind ``plan.sources`` (ROS via
+    the device block cache, plus pending WOS rows unless
+    ``include_wos=False`` -- the segmented executor slabs WOS rows
+    separately so trickle loads don't invalidate its cached ROS slabs),
+    as flat numpy arrays with a visibility mask.  Partitioning rows onto
+    mesh shards is host work, so the columns come back as numpy, but the
+    decode itself still runs through the cached device blocks."""
+    need = sorted(set(need))
+    ros = scan_stores_batched(db, plan, need, None, None, as_of, stats)
+    parts: List[Dict[str, np.ndarray]] = []
+    valids: List[np.ndarray] = []
+    if ros is not None:
+        parts.append({c: np.asarray(v) for c, v in ros.columns.items()})
+        valids.append(np.asarray(ros.valid))
+    if include_wos:
+        wos = wos_scan_host(db, plan, need, as_of)
+        if wos is not None:
+            parts.append(wos[0])
+            valids.append(wos[1])
     if not parts:
         return None
     cols = {c: np.concatenate([p[c] for p in parts]) for c in need}
@@ -298,8 +343,12 @@ def build_join_sides(db: VerticaDB, q, as_of: int
         if cache is None:
             builds.append(make())
         else:
+            # effective-epoch key: as-of clamped to the dim table's epoch
+            # ceiling, so trickle loads into OTHER tables advance the
+            # cluster epoch without evicting this build side
+            eff = min(as_of, db.table_epoch_ceiling(spec.dim_table))
             builds.append(cache.get_or_put(
-                f"dim:{spec.dim_table}", f"{spec.signature()}@{as_of}",
+                f"dim:{spec.dim_table}", f"{spec.signature()}@{eff}",
                 KIND_BUILD, make, device_bytes))
     return builds
 

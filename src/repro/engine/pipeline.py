@@ -40,17 +40,29 @@ from . import executor as fused_exec
 from . import operators as ops
 from .sip import sip_filter
 
-# back-compat: JoinSpec always matched the IR's join shape field-for-field
+# DEPRECATED back-compat alias: JoinSpec always matched the IR's join
+# shape field-for-field, so the shim IS LogicalJoin.  New code should
+# spell it ``LogicalJoin`` (engine/logical.py) or -- better -- use the
+# fluent ``db.query(...).join(...)`` builder (engine/builder.py).
 JoinSpec = LogicalJoin
 
 _PACK_LIMIT = 1 << 31   # packed keys live in device int32 by default
 
+_shim_warned = False
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Query:
-    """DEPRECATED legacy front-end (single join, single group-by column).
-    Kept as a thin shim: ``to_ir()`` lowers to the LogicalQuery consumed
-    everywhere; ``execute``/``plan_query`` accept it transparently."""
+    """DEPRECATED pre-IR front-end (single join, single group-by column),
+    frozen at its PR-1 feature set.  Kept only as a thin shim for old
+    call sites: ``to_ir()`` lowers to the ``LogicalQuery`` consumed
+    everywhere, and ``execute``/``plan_query`` accept it transparently
+    (emitting one ``DeprecationWarning`` per process).  New code should
+    use the fluent builder -- ``db.query("t").where(...).join(...)
+    .group_by(...).agg(...).collect()`` (engine/builder.py) -- or build
+    ``LogicalQuery`` directly; both support multi-join, multi-column
+    GROUP BY, derived columns, HAVING and multi-key ORDER BY, which this
+    shim never will."""
     table: str
     columns: Tuple[str, ...] = ()
     predicate: Optional[Expr] = None
@@ -62,6 +74,14 @@ class Query:
     limit: Optional[int] = None
 
     def to_ir(self) -> LogicalQuery:
+        global _shim_warned
+        if not _shim_warned:
+            _shim_warned = True
+            import warnings
+            warnings.warn(
+                "repro.engine.Query is a deprecated shim; use "
+                "db.query(...) (engine/builder.py) or LogicalQuery",
+                DeprecationWarning, stacklevel=2)
         return LogicalQuery(
             table=self.table, columns=tuple(self.columns),
             predicate=self.predicate,
@@ -98,6 +118,9 @@ class ExecStats:
     n_shards: int = 0
     exchange: str = ""              # ";"-joined per-join exchange ops
     reseg_overflow: int = 0         # tuples that hit a full exchange slot
+    seg_slab: str = ""              # ROS slab "hit"/"miss", "+wos" when a
+    #                                 trickle-load delta slab was appended
+    snapshot_epoch: int = 0         # pinned cluster snapshot this query read
 
 
 def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
@@ -126,7 +149,11 @@ def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
                       groupby_algorithm=plan.groupby_algorithm,
                       join_strategy=plan.join_strategy,
                       frontend_s=frontend_s)
-    as_of = as_of if as_of is not None else db.epochs.latest_queryable()
+    # pin the cluster snapshot epoch for the query's lifetime (§5):
+    # trickle-load commits advancing the epoch concurrently cannot shift
+    # what this query sees, and the AHM cannot purge the history it reads
+    as_of = db.epochs.pin(as_of)
+    stats.snapshot_epoch = as_of
     bc = db.block_cache.stats
     bc_h0, bc_m0 = bc.hits, bc.misses
 
@@ -138,99 +165,102 @@ def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
         stats.wall_s = time.time() - t0
         return out, stats
 
-    # --- segmented multi-device path (explicit opt-in via mesh) ---
-    if mesh is not None:
-        from . import segmented
-        res = segmented.execute_segmented(db, q, plan, as_of, mesh,
-                                          mesh_axis, stats)
+    try:
+        # --- segmented multi-device path (explicit opt-in via mesh) ---
+        if mesh is not None:
+            from . import segmented
+            res = segmented.execute_segmented(db, q, plan, as_of, mesh,
+                                              mesh_axis, stats)
+            if res is not None:
+                return _finish(res)
+
+        # --- scalar COUNT directly on RLE runs (predicate on sort leader) ---
+        if plan.scalar_rle:
+            res = _rle_scalar_count(db, q, plan, as_of)
+            if res is not None:
+                stats.groupby_algorithm = "rle-scalar"
+                return _finish(res)
+
+        # --- RLE-direct fast path: aggregate on encoded data, zero decode ---
+        if plan.groupby_algorithm == "rle" and not q.joins \
+                and q.predicate is None:
+            res = _rle_groupby(db, q, plan, as_of)
+            if res is not None:
+                return _finish(res)
+            stats.groupby_algorithm = "sort (rle fallback)"
+            plan = dataclasses.replace(plan, groupby_algorithm="sort")
+
+        # --- warm path: cached fused scan->join->predicate->aggregate ---
+        res = fused_exec.execute_fused(db, q, plan, as_of, stats)
         if res is not None:
+            stats.fused = True
             return _finish(res)
 
-    # --- scalar COUNT directly on RLE runs (predicate on sort leader) ---
-    if plan.scalar_rle:
-        res = _rle_scalar_count(db, q, plan, as_of)
-        if res is not None:
-            stats.groupby_algorithm = "rle-scalar"
-            return _finish(res)
+        # --- build sides + SIP (§6.1), one per join in plan order ---
+        builds = fused_exec.build_join_sides(db, q, as_of)
+        sips: List[Callable] = []
+        for ji, spec in enumerate(q.joins):
+            if plan.sip_joins and plan.sip_joins[ji]:
+                sips.append(sip_filter(builds[ji][spec.dim_key],
+                                       spec.fact_key))
+                stats.sip_applied = True
+        sip = _combine_sips(sips)
 
-    # --- RLE-direct fast path: aggregate on encoded data, zero decode ---
-    if plan.groupby_algorithm == "rle" and not q.joins \
-            and q.predicate is None:
-        res = _rle_groupby(db, q, plan, as_of)
-        if res is not None:
-            return _finish(res)
-        stats.groupby_algorithm = "sort (rle fallback)"
-        plan = dataclasses.replace(plan, groupby_algorithm="sort")
+        # --- scan (SMA pruning + predicate + SIP pushed down) ---
+        proj = db.catalog.projections[plan.projection]
+        need = q.scan_columns(proj)
+        # predicates over join outputs / derived columns defer past the scan
+        scan_pred = q.scan_predicate(proj.columns)
+        scans = []
+        # ROS containers: one batched device-cached scan over every source
+        # (engine/executor.py), replacing the per-container Python loop
+        ros = fused_exec.scan_stores_batched(db, plan, sorted(need),
+                                             scan_pred, sip, as_of, stats)
+        if ros is not None:
+            scans.append(ros)
+        for host, owner in plan.sources:
+            store = db.nodes[host].stores[owner]
+            # WOS rows participate too (unencoded scan)
+            wos = fused_exec.wos_visible(store, as_of)
+            if wos is not None:
+                data, vis = wos
+                cols = {c: jnp.asarray(data[c]) for c in need}
+                valid = jnp.asarray(vis)
+                if scan_pred is not None:
+                    valid = valid & jnp.asarray(scan_pred(cols), bool)
+                if sip is not None:
+                    valid = valid & sip(cols)
+                scans.append(ops.ScanResult(cols, valid))
+        merged = ops.concat_scans(scans)
+        if merged is None:
+            return _finish(_empty_result(q))
+        stats.blocks_pruned = merged.pruned_blocks
+        stats.blocks_total = merged.total_blocks
+        cols, valid = dict(merged.columns), merged.valid
+        stats.rows_scanned = int(cols[next(iter(cols))].shape[0])
 
-    # --- warm path: cached fused scan->join->predicate->aggregate ---
-    res = fused_exec.execute_fused(db, q, plan, as_of, stats)
-    if res is not None:
-        stats.fused = True
-        return _finish(res)
+        # --- joins (in plan order; later probes may use earlier outputs) ---
+        for spec, build in zip(q.joins, builds):
+            cols, valid = ops.hash_join(build, spec.dim_key, cols,
+                                        spec.fact_key, valid, how=spec.how)
 
-    # --- build sides + SIP (§6.1), one per join in plan order ---
-    builds = fused_exec.build_join_sides(db, q, as_of)
-    sips: List[Callable] = []
-    for ji, spec in enumerate(q.joins):
-        if plan.sip_joins and plan.sip_joins[ji]:
-            sips.append(sip_filter(builds[ji][spec.dim_key],
-                                   spec.fact_key))
-            stats.sip_applied = True
-    sip = _combine_sips(sips)
+        # --- derived projections, then any deferred predicate ---
+        for name, e in q.derived:
+            cols[name] = e(cols)
+        if scan_pred is None and q.predicate is not None:
+            valid = valid & jnp.asarray(q.predicate(cols), bool)
 
-    # --- scan (SMA pruning + predicate + SIP pushed down) ---
-    proj = db.catalog.projections[plan.projection]
-    need = q.scan_columns(proj)
-    # predicates over join outputs / derived columns defer past the scan
-    scan_pred = q.scan_predicate(proj.columns)
-    scans = []
-    # ROS containers: one batched device-cached scan over every source
-    # (engine/executor.py), replacing the per-container Python loop
-    ros = fused_exec.scan_stores_batched(db, plan, sorted(need),
-                                         scan_pred, sip, as_of, stats)
-    if ros is not None:
-        scans.append(ros)
-    for host, owner in plan.sources:
-        store = db.nodes[host].stores[owner]
-        # WOS rows participate too (unencoded scan)
-        wos = fused_exec.wos_visible(store, as_of)
-        if wos is not None:
-            data, vis = wos
-            cols = {c: jnp.asarray(data[c]) for c in need}
-            valid = jnp.asarray(vis)
-            if scan_pred is not None:
-                valid = valid & jnp.asarray(scan_pred(cols), bool)
-            if sip is not None:
-                valid = valid & sip(cols)
-            scans.append(ops.ScanResult(cols, valid))
-    merged = ops.concat_scans(scans)
-    if merged is None:
-        return _finish(_empty_result(q))
-    stats.blocks_pruned = merged.pruned_blocks
-    stats.blocks_total = merged.total_blocks
-    cols, valid = dict(merged.columns), merged.valid
-    stats.rows_scanned = int(cols[next(iter(cols))].shape[0])
-
-    # --- joins (in plan order; later probes may use earlier outputs) ---
-    for spec, build in zip(q.joins, builds):
-        cols, valid = ops.hash_join(build, spec.dim_key, cols,
-                                    spec.fact_key, valid, how=spec.how)
-
-    # --- derived projections, then any deferred predicate ---
-    for name, e in q.derived:
-        cols[name] = e(cols)
-    if scan_pred is None and q.predicate is not None:
-        valid = valid & jnp.asarray(q.predicate(cols), bool)
-
-    # --- groupby / aggregate / plain select ---
-    if q.group_by or q.aggs:
-        out = _run_groupby(q, plan, cols, valid, stats)
-    else:
-        mask = np.asarray(valid)
-        keep = set(q.columns) | {n for n, _ in q.derived}
-        out = {c: np.asarray(v)[mask] for c, v in cols.items()
-               if (c in keep) or (not keep and c != "_matched")}
-    return _finish(out)
+        # --- groupby / aggregate / plain select ---
+        if q.group_by or q.aggs:
+            out = _run_groupby(q, plan, cols, valid, stats)
+        else:
+            mask = np.asarray(valid)
+            keep = set(q.columns) | {n for n, _ in q.derived}
+            out = {c: np.asarray(v)[mask] for c, v in cols.items()
+                   if (c in keep) or (not keep and c != "_matched")}
+        return _finish(out)
+    finally:
+        db.epochs.unpin(as_of)
 
 
 # ---------------------------------------------------------------------------

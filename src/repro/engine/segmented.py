@@ -48,6 +48,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core.block_cache import KIND_SEG
 from ..core.database import VerticaDB
 from ..core.segmentation import hash_columns, shard_of
 from ..planner import cost as cost_mod
@@ -57,7 +58,6 @@ from . import operators as ops
 from .executor import PLAN_CACHE
 from .logical import LogicalQuery
 
-KIND_SEG = "segmented"        # partitioned per-shard scan slabs
 _PACK_LIMIT = 1 << 31         # packed keys live in device int32
 _PAD_MULTIPLE = 8
 
@@ -82,19 +82,22 @@ def _canon_np(v: np.ndarray) -> np.ndarray:
     return v
 
 
-def _source_sig(db: VerticaDB, plan, need, reseg_keys, as_of: int,
+def _source_sig(db: VerticaDB, plan, need, reseg_keys, eff: int,
                 mesh, axis: str) -> tuple:
-    """Identity of a partitioned slab: snapshot epoch, mesh identity,
+    """Identity of a cached ROS slab: *effective* snapshot epoch (the
+    query's as-of clamped to the sources' ROS epoch ceiling -- trickle
+    commits that only touched the WOS advance the cluster epoch without
+    changing ROS visibility, so warm slabs survive them), mesh identity,
     needed columns, resegment keys, and the exact physical container set
     (the tuple mover retires containers by replacing ids, so a mergeout
-    or moveout naturally misses)."""
+    or moveout naturally misses -- and ``ProjectionStore.
+    invalidate_seg_slabs`` evicts precisely those entries)."""
     items = []
     for host, owner in plan.sources:
         store = db.nodes[host].stores[owner]
         items.append((host, owner,
-                      tuple(c.id for c in store.containers),
-                      int(store.wos.n_rows)))
-    return (tuple(items), tuple(need), tuple(reseg_keys), int(as_of),
+                      tuple(c.id for c in store.containers)))
+    return (tuple(items), tuple(need), tuple(reseg_keys), int(eff),
             _mesh_sig(mesh, axis))
 
 
@@ -140,33 +143,30 @@ def _slab_bytes(slab: dict) -> int:
     return n
 
 
-def _gather_and_partition(db: VerticaDB, proj, plan, need: Sequence[str],
-                          reseg_keys: Sequence[str], as_of: int, mesh,
-                          axis: str, n_shards: int, stats
-                          ) -> Optional[dict]:
-    host = fused_exec.snapshot_scan_host(db, plan, need, as_of, stats)
-    if host is None:
-        return None
-    cols_np, valid_np = host
-    mask = np.asarray(valid_np, bool)
-    if not mask.any():
-        return None
-    cols_np = {c: _canon_np(np.asarray(v)[mask])
-               for c, v in cols_np.items()}
-    n = int(mask.sum())
-
-    # device shard placement: ring hash of the segmentation columns,
-    # OFFSET-FREE (core/segmentation.shard_of) -- the same logical row
-    # must land on the same shard whether the primary or the ring-offset
-    # buddy store served it.  Replicated projections have no ring: spread
-    # rows round-robin.
+def _shard_assignment(proj, cols_np: Dict[str, np.ndarray], n: int,
+                      n_shards: int, ring: Optional[np.ndarray] = None,
+                      base: int = 0) -> np.ndarray:
+    """Device shard per row: ring hash of the segmentation columns,
+    OFFSET-FREE (core/segmentation.shard_of) -- the same logical row must
+    land on the same shard whether the primary or the ring-offset buddy
+    store served it.  Trickle-loaded WOS rows arrive with their ring
+    value already stamped at commit (``ring``), so no re-hash.
+    Replicated projections have no ring: spread rows round-robin."""
     seg = proj.segmentation
     if seg.replicated:
-        shard = (np.arange(n, dtype=np.int64) % n_shards).astype(np.int32)
-    else:
+        return ((base + np.arange(n, dtype=np.int64))
+                % n_shards).astype(np.int32)
+    if ring is None:
         ring = hash_columns(*[cols_np[c] for c in seg.columns])
-        shard = shard_of(ring, n_shards)
+    return shard_of(ring, n_shards)
 
+
+def _partition_to_slab(cols_np: Dict[str, np.ndarray], shard: np.ndarray,
+                       reseg_keys: Sequence[str], n_shards: int, mesh,
+                       axis: str) -> dict:
+    """Pack host rows (already masked + canonicalized) into a static
+    ``(n_shards, per)`` device slab from each row's shard assignment."""
+    n = len(shard)
     # resegment destinations (hash of each future join key) are computed
     # here, on the host rows, because a snowflake key that only exists
     # after a join was already demoted to broadcast by the planner
@@ -208,22 +208,129 @@ def _gather_and_partition(db: VerticaDB, proj, plan, need: Sequence[str],
             "r0": counts, "bounds": bounds}
 
 
+def _gather_ros(db: VerticaDB, proj, plan, need: Sequence[str],
+                reseg_keys: Sequence[str], eff: int, mesh,
+                axis: str, n_shards: int, stats) -> Optional[dict]:
+    host = fused_exec.snapshot_scan_host(db, plan, need, eff, stats,
+                                         include_wos=False)
+    if host is None:
+        return None
+    cols_np, valid_np = host
+    mask = np.asarray(valid_np, bool)
+    if not mask.any():
+        return None
+    cols_np = {c: _canon_np(np.asarray(v)[mask])
+               for c, v in cols_np.items()}
+    n = int(mask.sum())
+    shard = _shard_assignment(proj, cols_np, n, n_shards)
+    return _partition_to_slab(cols_np, shard, reseg_keys, n_shards, mesh,
+                              axis)
+
+
+def _gather_wos(db: VerticaDB, proj, plan, need: Sequence[str],
+                reseg_keys: Sequence[str], as_of: int, mesh, axis: str,
+                n_shards: int, ros_rows: int) -> Optional[dict]:
+    """The trickle-load delta: pending WOS rows slabbed per shard from
+    their commit-time ring tags.  Never cached -- every commit changes it
+    -- but it is small by construction (the tuple mover drains saturated
+    WOS), so re-slabbing it per query is the cheap half of the split."""
+    wos = fused_exec.wos_scan_host(db, plan, need, as_of)
+    if wos is None:
+        return None
+    cols_np, vis, ring = wos
+    mask = np.asarray(vis, bool)
+    if not mask.any():
+        return None
+    cols_np = {c: _canon_np(np.asarray(v)[mask])
+               for c, v in cols_np.items()}
+    n = int(mask.sum())
+    shard = _shard_assignment(proj, cols_np, n, n_shards,
+                              ring=None if ring is None else ring[mask],
+                              base=ros_rows)
+    return _partition_to_slab(cols_np, shard, reseg_keys, n_shards, mesh,
+                              axis)
+
+
+def _build_concat_program(mesh, axis: str):
+    """Append the WOS delta slab to the ROS slab shard-locally (both are
+    already partitioned by the same ring map, so this is pure local
+    concatenation -- no collective)."""
+
+    def local_fn(a_cols, a_valid, a_dests, b_cols, b_valid, b_dests):
+        cols = {c: jnp.concatenate([a_cols[c], b_cols[c]])
+                for c in a_cols}
+        valid = jnp.concatenate([a_valid, b_valid])
+        dests = {k: jnp.concatenate([a_dests[k], b_dests[k]])
+                 for k in a_dests}
+        return cols, valid, dests
+
+    fn = shard_map(local_fn, mesh=mesh, in_specs=(P(axis),) * 6,
+                   out_specs=(P(axis),) * 3)
+    return jax.jit(fn)
+
+
+def _merge_bounds(a: Optional[tuple], b: Optional[tuple]
+                  ) -> Optional[tuple]:
+    if a is None or b is None:
+        return None
+    return (min(a[0], b[0]), max(a[1], b[1]))
+
+
+def _concat_slabs(ros: dict, wos: dict, mesh, axis: str) -> dict:
+    fn, _ = PLAN_CACHE.get_or_build(
+        ("seg-concat", _mesh_sig(mesh, axis),
+         tuple(sorted(ros["cols"])), tuple(sorted(ros["dests"]))),
+        lambda: _build_concat_program(mesh, axis))
+    cols, valid, dests = fn(ros["cols"], ros["valid"], ros["dests"],
+                            wos["cols"], wos["valid"], wos["dests"])
+    return {"cols": cols, "valid": valid, "dests": dests,
+            "per": ros["per"] + wos["per"],
+            "n_rows": ros["n_rows"] + wos["n_rows"],
+            "real": {k: ros["real"][k] + wos["real"][k]
+                     for k in ros["real"]},
+            "r0": ros["r0"] + wos["r0"],
+            "bounds": {c: _merge_bounds(ros["bounds"][c],
+                                        wos["bounds"][c])
+                       for c in ros["bounds"]}}
+
+
 def _sharded_scan(db: VerticaDB, proj, plan, need, reseg_keys, as_of: int,
                   mesh, axis: str, n_shards: int, stats) -> Optional[dict]:
+    """Two-part partitioned scan: the ROS slab is cached (keyed by the
+    effective epoch + exact container set, invalidated precisely by the
+    tuple mover) while pending WOS rows are slabbed fresh per query and
+    appended shard-locally -- a trickle-load commit therefore costs one
+    small WOS re-slab, never a whole-projection repartition."""
     cache = getattr(db, "block_cache", None)
+    ros = None
     if cache is None:
-        return _gather_and_partition(db, proj, plan, need, reseg_keys,
-                                     as_of, mesh, axis, n_shards, stats)
-    sig = _source_sig(db, plan, need, reseg_keys, as_of, mesh, axis)
-    key = f"slab|{hash(sig) & 0xFFFFFFFFFFFFFFFF:016x}"
-    cid = f"seg:{plan.projection}"
-    slab = cache.get(cid, key, KIND_SEG)
-    if slab is None:
-        slab = _gather_and_partition(db, proj, plan, need, reseg_keys,
-                                     as_of, mesh, axis, n_shards, stats)
-        if slab is not None:
-            cache.put(cid, key, KIND_SEG, slab, _slab_bytes(slab))
-    return slab
+        ros = _gather_ros(db, proj, plan, need, reseg_keys, as_of, mesh,
+                          axis, n_shards, stats)
+        stats.seg_slab = "nocache"
+    else:
+        ceil = max((db.nodes[h].stores[o].epoch_ceiling(include_wos=False)
+                    for h, o in plan.sources), default=0)
+        eff = min(as_of, ceil)
+        sig = _source_sig(db, plan, need, reseg_keys, eff, mesh, axis)
+        ids = frozenset(i for item in sig[0] for i in item[2])
+        key = ("slab", ids, sig)
+        cid = f"seg:{plan.projection}"
+        ros = cache.get(cid, key, KIND_SEG)
+        stats.seg_slab = "hit" if ros is not None else "miss"
+        if ros is None:
+            ros = _gather_ros(db, proj, plan, need, reseg_keys, eff, mesh,
+                              axis, n_shards, stats)
+            if ros is not None:
+                cache.put(cid, key, KIND_SEG, ros, _slab_bytes(ros))
+    wos = _gather_wos(db, proj, plan, need, reseg_keys, as_of, mesh, axis,
+                      n_shards, 0 if ros is None else ros["n_rows"])
+    if wos is not None:
+        stats.seg_slab += "+wos"
+    if ros is None:
+        return wos
+    if wos is None:
+        return ros
+    return _concat_slabs(ros, wos, mesh, axis)
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,7 @@ def scan_cost(db: VerticaDB, proj: ProjectionDef,
     bounds = predicate.bounds() if predicate is not None else {}
     est = CostEstimate()
     for node in db.nodes:
-        if not node.up:
+        if not node.serving():      # recovering stores are incomplete
             continue
         store = node.stores.get(proj.name)
         if store is None:
@@ -73,7 +73,7 @@ def selectivity(db: VerticaDB, proj: ProjectionDef,
         return 0.5
     frac = 1.0
     for node in db.nodes:
-        if not node.up:
+        if not node.serving():
             continue
         store = node.stores.get(proj.name)
         if not store or not store.containers:
@@ -122,7 +122,7 @@ def join_distribution(db: VerticaDB, fact_proj: ProjectionDef,
         return "co-located (matching segmentation)", 0.0
     bcast_bytes = dim_rows * 16.0 * db.catalog.n_nodes
     fact_rows = sum(
-        st.ros_rows() for n in db.nodes if n.up
+        st.ros_rows() for n in db.nodes if n.serving()
         for st in [n.stores[fact_proj.name]])
     reseg_bytes = fact_rows * 16.0
     if bcast_bytes <= reseg_bytes:

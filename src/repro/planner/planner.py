@@ -95,9 +95,14 @@ def plan_query(db: VerticaDB, q) -> PhysicalPlan:
         f"projection {proj.name} (sort {proj.sort_order}, "
         f"~{est.bytes_scanned/1e6:.2f}MB scanned, est {est.total*1e3:.3f}ms)")
 
-    # source routing (buddy failover; one host may serve two segments)
+    # source routing (buddy failover; one host may serve two segments).
+    # ``serving()`` excludes recovering shards: a rejoined node receives
+    # commits but must not serve scans until recover_node() completes
     if proj.segmentation.replicated:
-        first_up = next(n.id for n in db.nodes if n.up)
+        first_up = next((n.id for n in db.nodes if n.serving()), None)
+        if first_up is None:
+            from ..core.database import AvailabilityError
+            raise AvailabilityError(f"no serving replica of {proj.name}")
         plan.sources = [(first_up, proj.name)]
     else:
         owners = db.segment_owners(proj)
@@ -221,7 +226,7 @@ def plan_query(db: VerticaDB, q) -> PhysicalPlan:
 def _dim_row_estimate(db: VerticaDB, proj) -> int:
     """Build-side cardinality from store metadata (no decode; delete
     vectors ignored -- an overcount is fine for a strategy decision)."""
-    up = [n for n in db.nodes if n.up]
+    up = [n for n in db.nodes if n.serving()]
     if proj.segmentation.replicated:
         up = up[:1]
     return sum(st.ros_rows() + st.wos.n_rows
@@ -231,7 +236,7 @@ def _dim_row_estimate(db: VerticaDB, proj) -> int:
 def _domain_estimate(db: VerticaDB, proj, col: str) -> Optional[int]:
     lo = hi = None
     for node in db.nodes:
-        if not node.up:
+        if not node.serving():
             continue
         for c in node.stores[proj.name].containers:
             if col not in c.smas or c.n_rows == 0:
@@ -251,7 +256,7 @@ def _is_rle_sorted(db: VerticaDB, proj, col: str) -> bool:
     if not proj.sort_order or proj.sort_order[0] != col:
         return False
     for node in db.nodes:
-        if not node.up:
+        if not node.serving():
             continue
         for c in node.stores[proj.name].containers:
             if c.columns[col].encoding != Encoding.RLE:

@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import AvailabilityError, VerticaDB
+from repro.core import (AvailabilityError, ColumnDef, TableSchema,
+                        VerticaDB)
 from repro.core.recovery import backup, rebalance, recover_node, restore
 
 
@@ -94,6 +95,58 @@ def test_recovery_replays_missed_commits(sales_db):
     # and node 1 now serves its own segment again
     db.fail_node(2)
     assert _tuples(db.read_table("sales")) == expect
+
+
+def test_recovery_waits_for_buddy_source(sales_db):
+    """A node whose replay source is unavailable must NOT flip back to
+    serving with its missed epochs unreplayed: it stays in recovering
+    state (loud AvailabilityError on reads of its segments, never a
+    silently incomplete answer) and a later recover_node retry -- once
+    the buddy is back -- completes."""
+    db, _ = sales_db
+    db.fail_node(1)
+    t = db.begin()
+    db.insert(t, "sales", {"sale_id": np.arange(9800, 9900),
+                           "cid": np.full(100, 13, np.int64),
+                           "date": np.full(100, 99, np.int64),
+                           "price": np.ones(100)})
+    db.commit(t)
+    db.run_tuple_mover(force_moveout=True)   # persist to buddy ROS
+    expect = _tuples(db.read_table("sales"))
+    db.fail_node(2)                # hosts node 1's buddy segments
+    recover_node(db, 1)
+    assert db.nodes[1].up and db.nodes[1].recovering
+    assert db.nodes[1].last_recovery["complete"] is False
+    with pytest.raises(AvailabilityError):
+        db.read_table("sales")     # segment 1 has no serving copy
+    recover_node(db, 2)            # buddy host returns (via node 3)
+    assert not db.nodes[2].recovering
+    recover_node(db, 1)            # retry now completes
+    assert not db.nodes[1].recovering
+    assert _tuples(db.read_table("sales")) == expect
+    db.fail_node(2)                # node 1 serves its own segment again
+    assert _tuples(db.read_table("sales")) == expect
+
+
+def test_replicated_routing_raises_when_no_serving_replica():
+    """Planner + reads on a replicated projection raise AvailabilityError
+    (not a bare StopIteration) when every node is down or recovering."""
+    from repro.planner import plan_query
+
+    db = VerticaDB(n_nodes=2, k_safety=1, block_rows=32)
+    db.create_table(TableSchema("dim", (ColumnDef("k"), ColumnDef("a"))),
+                    sort_order=("k",), segment_by=())    # replicated
+    t = db.begin()
+    db.insert(t, "dim", {"k": np.arange(10), "a": np.arange(10) % 3})
+    db.commit(t)
+    db.fail_node(0)
+    db.rejoin_node(0)              # up but recovering: not serving
+    db.fail_node(1)
+    q = db.query("dim").group_by("a").agg(n=("*", "count")).to_ir()
+    with pytest.raises(AvailabilityError):
+        plan_query(db, q)
+    with pytest.raises(AvailabilityError):
+        db.read_table("dim")
 
 
 def test_rebalance_preserves_data(sales_db):

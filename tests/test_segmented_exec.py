@@ -23,6 +23,7 @@ import numpy as np
 import pytest
 
 from repro.core import ColumnDef, SQLType, TableSchema, VerticaDB
+from repro.core.recovery import recover_node
 from repro.engine import col, execute
 from repro.engine.exchange import resegment
 from repro.planner import plan_query
@@ -344,6 +345,130 @@ def test_fallback_outside_segmented_subset(star_db):
     db.detach_mesh()
     assert not stats.segmented
     assert_match(ref, out, ordered=False, label="select")
+
+
+# ---------------------------------------------------------------------------
+# distributed trickle load: writes interleaved between segmented queries
+# ---------------------------------------------------------------------------
+
+def _trickle(db, rng, n=60, base=100_000):
+    """One small committed batch into the fact table (lands in per-shard
+    WOS slabs, ring-tagged at commit)."""
+    t = db.begin()
+    db.insert(t, "sales", {
+        "sale_id": base + np.arange(n, dtype=np.int64),
+        "custkey": rng.integers(0, N_CUST, n),
+        "suppkey": rng.integers(0, N_SUPP, n),
+        "partkey": rng.integers(0, N_PART, n),
+        "day": rng.integers(0, 365, n),
+        "qty": rng.integers(1, 50, n),
+        "delta": rng.integers(-40, 40, n),
+        "price": np.round(rng.normal(100, 10, n), 2)})
+    return db.commit(t)
+
+
+def test_trickle_load_interleaved_oracle():
+    """The 20-query differential corpus with trickle-load commits BETWEEN
+    queries: segmented results must keep matching single-node, and after
+    the first query per container-state the cached ROS slab must stay
+    warm (only the small WOS delta re-slabs) even though every commit
+    advances the cluster epoch."""
+    db = make_db(seed=31)
+    rng = np.random.default_rng(77)
+    base = 100_000
+    ros_state_seen = False
+    for i in range(20):
+        if i % 2 == 1:           # trickle between queries
+            _trickle(db, rng, base=base)
+            base += 1000
+        if i == 13:              # a moveout mid-stream: containers change
+            db.run_tuple_mover(force_moveout=True)
+        qb = gen_query(db, rng)
+        ir = qb.to_ir()
+        ref, out, stats = run_both(db, qb)
+        assert stats.segmented, (i, ir.signature())
+        assert_match(ref, out, ordered=bool(ir.order_by), label=f"t{i}")
+        if i >= 1 and "+wos" in stats.seg_slab:
+            ros_state_seen = True
+    assert ros_state_seen, "no query observed a WOS delta slab"
+
+
+def test_trickle_commit_keeps_ros_slab_warm():
+    """A commit that lands purely in the WOS must NOT invalidate the
+    cached ROS slab: the epoch advances but ROS visibility (its epoch
+    ceiling) is unchanged, so the warm query re-slabs only the delta."""
+    db = make_db(seed=32)
+    rng = np.random.default_rng(5)
+    qb = (db.query("sales").where(col("qty") > 5)
+          .group_by("suppkey").agg(n=("*", "count"), s=("qty", "sum")))
+    _, _, s1 = run_both(db, qb)
+    assert s1.seg_slab == "miss"
+    _trickle(db, rng)                       # epoch advances, WOS only
+    ref, out, s2 = run_both(db, qb)
+    assert s2.seg_slab == "hit+wos", s2.seg_slab
+    assert_match(ref, out, ordered=False, label="warm-ros+wos")
+    # moveout drains the WOS into new containers: the old slab is evicted
+    # precisely (key carries the container set) and the next run misses
+    db.run_tuple_mover(force_moveout=True)
+    ref, out, s3 = run_both(db, qb)
+    assert s3.seg_slab == "miss", s3.seg_slab
+    assert_match(ref, out, ordered=False, label="post-moveout")
+
+
+def test_fail_load_rejoin_recover_cycle():
+    """The full distributed-ingest availability story: fail a node, keep
+    trickle-loading (buddy serves its segments), REJOIN it (it receives
+    new commits but serves no reads), keep loading, then incremental
+    recovery replays ONLY the epochs missed while down -- adopting
+    segment-aligned buddy containers wholesale -- and the differential
+    oracle holds at every stage."""
+    db = make_db(k_safety=1, seed=41)
+    rng = np.random.default_rng(13)
+    queries = [
+        db.query("sales").where(col("day") < 250)
+          .group_by("suppkey").agg(n=("*", "count"), s=("qty", "sum")),
+        db.query("sales")
+          .join("customer", on=("custkey", "c_custkey"),
+                cols=("c_nation",))
+          .group_by("c_nation").agg(n=("*", "count")),
+        db.query("sales")
+          .join("parts", on=("partkey", "p_partkey"), cols=("p_cat",))
+          .group_by("p_cat").agg(n=("*", "count"), s=("qty", "sum")),
+    ]
+
+    def check(label):
+        for qi, qb in enumerate(queries):
+            ref, out, stats = run_both(db, qb)
+            assert stats.segmented
+            assert_match(ref, out, ordered=False, label=f"{label}-{qi}")
+
+    db.fail_node(1)
+    _trickle(db, rng, base=200_000)        # loads route around the corpse
+    check("down")
+    # move the while-down loads into ROS on the buddy (moveout only: a
+    # mergeout would fold them into pre-failure containers): recovery can
+    # then adopt whole segment-aligned containers instead of replaying rows
+    db.run_tuple_mover(force_moveout=True, do_mergeout=False)
+    e_join = db.rejoin_node(1)
+    assert db.nodes[1].up and db.nodes[1].recovering
+    # rejoined-but-recovering: reads still route to the buddy...
+    plan = plan_query(db, queries[0].to_ir())
+    assert any(owner.endswith("_b1") for _, owner in plan.sources)
+    # ...but NEW commits land on node 1 live (its WOS fills again)
+    _trickle(db, rng, base=300_000)
+    assert db.nodes[1].stores["sales_super"].wos.n_rows > 0
+    check("recovering")
+    replayed = recover_node(db, 1)
+    assert not db.nodes[1].recovering
+    rec = db.nodes[1].last_recovery
+    assert rec["replay_hi"] == e_join      # only missed epochs replayed
+    assert rec["adopted_containers"] > 0   # wholesale container copies
+    assert replayed.get("sales_super", 0) > 0
+    check("recovered")
+    # node 1 must now serve its own segment: fail its buddy host and the
+    # oracle still holds (would raise AvailabilityError pre-recovery)
+    db.fail_node(2)
+    check("buddy-down")
 
 
 # ---------------------------------------------------------------------------
