@@ -42,8 +42,8 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (ColumnDef, Encoding, SQLType,  # noqa: E402
-                        TableSchema, VerticaDB)
+from repro.core import (ColumnDef, CrashNode, Encoding,  # noqa: E402
+                        SQLType, TableSchema, VerticaDB)
 from repro.core.projection import super_projection  # noqa: E402
 from repro.data.synth import star_schema  # noqa: E402
 from repro.engine import LogicalQuery, col, execute  # noqa: E402
@@ -146,6 +146,57 @@ def _time(fn, reps=3):
     return min(ts)
 
 
+# fixed small size: the failover bench measures the retry/replan
+# machinery and buddy routing, not scan throughput, so it does not
+# scale with --quick
+FAILOVER_N_FACT = 80_000
+
+
+def _bench_failover():
+    fact, _ = star_schema(FAILOVER_N_FACT, 2_000)
+    db = VerticaDB(n_nodes=4, k_safety=1, block_rows=4096)
+    db.create_table(TableSchema("lineitem", (
+        ColumnDef("l_orderkey"), ColumnDef("l_suppkey"),
+        ColumnDef("l_shipdate"), ColumnDef("l_qty"),
+        ColumnDef("l_extprice", SQLType.FLOAT))),
+        sort_order=("l_shipdate", "l_suppkey"),
+        segment_by=("l_orderkey",))
+    t = db.begin()
+    db.insert(t, "lineitem", fact)
+    db.commit(t)
+    db.run_tuple_mover(force_moveout=True)
+    db.attach_mesh()
+    try:
+        q = (db.query("lineitem").group_by("l_suppkey")
+             .agg(c=("*", "count"), s=("l_qty", "sum")).to_ir())
+        healthy = _time(lambda: execute(db, q)[0])
+
+        # one-shot: node 1 dies mid-scan, the query replans onto buddies
+        # at its pinned epoch and still answers (includes the wasted
+        # attempt + replan, i.e. the latency a client actually sees)
+        inj = db.enable_faults(seed=7)
+        inj.on("segmented.slab_build", CrashNode(), node=1, hit=1)
+        t0 = time.time()
+        out, stats = execute(db, q)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        failover_s = time.time() - t0
+        db.disable_faults()
+        assert stats.failovers >= 1 and not db.nodes[1].up
+
+        # steady-state degraded: node 1 still down, segment 1 served by
+        # its buddy copy on node 2 (cold slab rebuild happens in warmup)
+        degraded = _time(lambda: execute(db, q)[0])
+    finally:
+        db.detach_mesh()
+    return {"n_fact": FAILOVER_N_FACT,
+            "healthy_warm_ms": healthy * 1e3,
+            "failover_query_ms": failover_s * 1e3,
+            "degraded_warm_ms": degraded * 1e3,
+            "degraded_over_healthy": degraded / healthy,
+            "failovers": stats.failovers,
+            "fault_retries": stats.fault_retries}
+
+
 def run(report):
     from repro.planner import plan_query
 
@@ -245,9 +296,21 @@ def run(report):
           f"{single_total*1e3:.1f}ms = "
           f"{single_total/seg_total:.2f}x over {list(seg_names)}")
 
+    # --- failover overhead (K-safety, §4.3): warm latency on a healthy
+    # cluster vs the one-shot mid-query failover (node crash + replan
+    # onto buddies at the pinned epoch) vs warm steady-state with the
+    # node still down (buddy routing).  Small fixed size: this measures
+    # the RETRY machinery, not scan throughput. ---
+    failover_row = _bench_failover()
+    print(f"[cstore] failover: healthy {failover_row['healthy_warm_ms']:.1f}ms, "
+          f"mid-query crash+retry {failover_row['failover_query_ms']:.1f}ms "
+          f"({failover_row['failovers']} failover(s)), degraded warm "
+          f"{failover_row['degraded_warm_ms']:.1f}ms "
+          f"({failover_row['degraded_over_healthy']:.2f}x)")
+
     result = {
         "n_fact": n_fact, "quick": _quick(), "queries": rows,
-        "segmented": seg_row,
+        "segmented": seg_row, "failover": failover_row,
         "total_vertica_s": tot_v, "total_baseline_s": tot_b,
         "total_cold_s": tot_cold, "total_warm_s": tot_v,
         "total_frontend_s": tot_fe,

@@ -1,20 +1,31 @@
 #!/usr/bin/env bash
-# Fast verification gate: tier-1 fast subset + quick cstore benchmark with
-# a perf-regression check against the committed BENCH_cstore.json.
+# Fast verification gate: tier-1 fast subset + docs tier + segmented
+# differential oracle + fixed-seed chaos tier + quick cstore benchmark
+# with a perf-regression check against the committed BENCH_cstore.json.
 #
 # Usage: scripts/verify.sh            (from the repo root)
 #
-# Fails when (a) any fast-subset test fails, (b) the benchmark errors, or
-# (c) the quick-mode warm total regresses > REGRESSION_TOLERANCE x over
-# the previous quick-mode BENCH_cstore.json (same n_fact only).
+# Fails when (a) any fast-subset test fails, (b) the docs/segmented/chaos
+# tiers fail or hang past their per-tier timeout, (c) the benchmark
+# errors, or (d) the quick-mode warm total regresses >
+# REGRESSION_TOLERANCE x over the previous quick-mode BENCH_cstore.json
+# (same n_fact only).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 TOL="${REGRESSION_TOLERANCE:-1.6}"
+# per-tier wall-clock budgets (coreutils timeout): a wedged collective or
+# an injected Hang that slipped past its in-process budget must fail the
+# gate loudly, not stall it
+T_FAST="${VERIFY_TIMEOUT_FAST:-600}"
+T_DOCS="${VERIFY_TIMEOUT_DOCS:-300}"
+T_SEG="${VERIFY_TIMEOUT_SEG:-600}"
+T_CHAOS="${VERIFY_TIMEOUT_CHAOS:-900}"
+T_BENCH="${VERIFY_TIMEOUT_BENCH:-600}"
 
 echo "== tier-1 fast subset =="
-python -m pytest -q -x -p no:cacheprovider \
+timeout "$T_FAST" python -m pytest -q -x -p no:cacheprovider \
     tests/test_engine.py \
     tests/test_logical_frontend.py \
     tests/test_block_cache.py \
@@ -22,18 +33,28 @@ python -m pytest -q -x -p no:cacheprovider \
     tests/test_segmentation_sma.py \
     tests/test_segmentation_props.py \
     tests/test_crash_replay_props.py \
-    tests/test_locks.py
+    tests/test_locks.py \
+    tests/test_faults.py
 
 echo "== docs tier: README/DESIGN snippets must run green =="
-python scripts/check_docs.py
+timeout "$T_DOCS" python scripts/check_docs.py
 
 echo "== segmented differential oracle (8-device CPU mesh) =="
 # a separate process: jax locks the device count at backend init, so the
 # 8-placeholder-device mesh needs XLA_FLAGS set before the first import
 # (test_segmentation_props.py is host-only and already ran in tier-1)
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-    python -m pytest -q -x -p no:cacheprovider \
+    timeout "$T_SEG" python -m pytest -q -x -p no:cacheprovider \
     tests/test_segmented_exec.py
+
+echo "== chaos tier: seeded fault schedules on the 8-device mesh =="
+# fixed seeds pin the exact fault schedule (fully deterministic given the
+# seed): every corpus query must match the never-failed oracle or raise a
+# typed AvailabilityError -- zero wrong answers
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    REPRO_CHAOS_SEEDS="${REPRO_CHAOS_SEEDS:-11,23}" \
+    timeout "$T_CHAOS" python -m pytest -q -x -p no:cacheprovider \
+    tests/test_fault_chaos.py
 
 echo "== quick cstore benchmark =="
 PREV=""
@@ -41,7 +62,7 @@ if [ -f BENCH_cstore.json ]; then
     PREV=$(mktemp)
     cp BENCH_cstore.json "$PREV"
 fi
-python -m benchmarks.run --quick cstore_queries
+timeout "$T_BENCH" python -m benchmarks.run --quick cstore_queries
 
 python - "$PREV" "$TOL" <<'EOF'
 import json

@@ -23,9 +23,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .block_cache import BlockCache
+from .block_cache import BlockCache, KIND_SEG
 from .catalog import Catalog, TableEntry
 from .epochs import EpochManager
+from .faults import (NULL_INJECTOR, FaultInjector, NodeCrashError,
+                     TransientFaultError, fire_with_retries)
 from .locks import LockManager
 from .projection import ProjectionDef, super_projection
 from .segmentation import SegmentationSpec
@@ -39,6 +41,66 @@ _txn_ids = itertools.count(1)
 
 class AvailabilityError(Exception):
     """Quorum lost or a segment has no live replica: database shutdown."""
+
+
+class SegmentUnavailableError(AvailabilityError):
+    """Every replica of one or more segments is down.  Carries exactly
+    which ring segments are unserveable (and at which epoch, when known)
+    so callers degrade loudly and precisely, never silently."""
+
+    def __init__(self, projection: str, segments: Sequence[int], *,
+                 epoch: Optional[int] = None, reason: str = ""):
+        self.projection = projection
+        self.segments: Tuple[int, ...] = tuple(sorted(set(segments)))
+        self.epoch = epoch
+        msg = (f"segment(s) {list(self.segments)} of {projection} "
+               f"unavailable")
+        if epoch is not None:
+            msg += f" at epoch {epoch}"
+        if reason:
+            msg += f" ({reason})"
+        super().__init__(msg)
+
+
+class RecoverySourceLostError(AvailabilityError):
+    """A recovering node's replay source is gone: recovery cannot
+    complete.  The node STAYS in recovering state (its segments keep
+    routing to whatever buddies remain; a later ``recover_node`` retry
+    may succeed).  Carries which projections could not replay, the
+    segments affected, and the epoch window (lge, rejoin] still owed."""
+
+    def __init__(self, node: int,
+                 projections: Dict[str, Tuple[int, ...]], *,
+                 window: Optional[Tuple[int, int]] = None):
+        self.node = node
+        self.projections = dict(projections)
+        self.segments: Tuple[int, ...] = tuple(sorted(
+            {s for segs in self.projections.values() for s in segs}))
+        self.window = window
+        msg = (f"node {node} recovery incomplete: no replay source for "
+               f"{sorted(self.projections)} (segments "
+               f"{list(self.segments)})")
+        if window is not None:
+            msg += f", epochs ({window[0]}, {window[1]}] unreplayed"
+        super().__init__(msg)
+
+
+class QueryRejectedError(AvailabilityError):
+    """A query exhausted its failover/retry budget.  The pinned snapshot
+    epoch and attempt count ride along so the caller knows exactly what
+    was refused -- the refusal is the guarantee: never a wrong answer."""
+
+    def __init__(self, reason: str, *, epoch: Optional[int] = None,
+                 attempts: int = 0,
+                 segments: Sequence[int] = ()):
+        self.reason = reason
+        self.epoch = epoch
+        self.attempts = attempts
+        self.segments = tuple(segments)
+        msg = f"query rejected: {reason}"
+        if epoch is not None:
+            msg += f" (pinned epoch {epoch}, {attempts} failover(s))"
+        super().__init__(msg)
 
 
 class TxnError(Exception):
@@ -100,6 +162,12 @@ class VerticaDB:
         # None = single-device execution
         self.mesh = None
         self.mesh_axis = "data"
+        # fault injection (core/faults.py): a no-op NullInjector unless a
+        # test/chaos harness opts in via enable_faults(seed=...)
+        self.faults = NULL_INJECTOR
+        # bounded mid-query failover budget (engine/pipeline.py): how many
+        # node-crash replans a single query absorbs before rejecting
+        self.max_failover_retries = 2
 
     # ------------------------------------------------------------- DDL --
 
@@ -151,6 +219,20 @@ class VerticaDB:
     def detach_mesh(self):
         """Back to single-device execution."""
         self.mesh = None
+
+    # ---------------------------------------------------------- faults --
+
+    def enable_faults(self, seed: Optional[int] = None,
+                      **cfg) -> FaultInjector:
+        """Attach a seeded deterministic fault injector (core/faults.py);
+        schedules registered on the returned injector fire at the named
+        injection points threaded through commit, tuple mover, recovery
+        and the segmented executor."""
+        self.faults = FaultInjector(self, seed=seed, **cfg)
+        return self.faults
+
+    def disable_faults(self) -> None:
+        self.faults = NULL_INJECTOR
 
     def query(self, table: str):
         """Fluent relational front-end (engine/builder.py):
@@ -266,6 +348,44 @@ class VerticaDB:
             raise AvailabilityError(
                 f"quorum lost: {len(up)}/{self.catalog.n_nodes} up, "
                 f"need {quorum}")
+        # ---- phase 1: every up staged node acknowledges the commit.
+        # This is the only window injected crashes / transient ejections
+        # can land in, and NO state has mutated yet -- so a commit refused
+        # below aborts cleanly and can simply be retried after repair.
+        for (proj_name, node_id) in txn.staged:
+            node = self.nodes[node_id]
+            if not node.up:
+                continue
+            try:
+                fire_with_retries(self, "commit.apply", node=node_id,
+                                  projection=proj_name)
+            except NodeCrashError:
+                pass  # the crashed node misses the commit; survivors
+                #       proceed (quorum is re-checked below)
+            except TransientFaultError:
+                # a node that cannot acknowledge a commit after the retry
+                # budget is ejected (paper §5: it must recover)
+                self.fail_node(node_id)
+        up = [n for n in self.nodes if n.up]
+        if len(up) < quorum:
+            self.locks.release_all(txn.id)
+            raise AvailabilityError(
+                f"quorum lost during commit: {len(up)}/"
+                f"{self.catalog.n_nodes} up, need {quorum}")
+        # ---- redundancy check: every staged row set must still have at
+        # least one live home.  Committing past this would silently DROP
+        # the rows of any segment whose every copy-holder died above --
+        # refuse the whole commit instead (typed, nothing applied).
+        lost = self._staged_segments_without_live_copy(txn)
+        if lost:
+            proj_name, segs = lost
+            self.locks.release_all(txn.id)
+            raise SegmentUnavailableError(
+                proj_name, segs, epoch=self.epochs.latest_queryable(),
+                reason="commit refused: every copy-holder of these "
+                       "staged segments is down")
+        # ---- phase 2: apply (survivors only; failed nodes' misses are
+        # replayed by incremental recovery from their buddies)
         epoch = self.epochs.advance()  # auto-advance on DML commit (§5.1)
         # deletes first: they target rows visible BEFORE this commit, so an
         # UPDATE's re-inserted rows are not swallowed by its own delete
@@ -286,6 +406,42 @@ class VerticaDB:
                 store.wos_delete_epochs.append(np.zeros(n, np.int64))
         self.locks.release_all(txn.id)
         return epoch
+
+    def _staged_segments_without_live_copy(self, txn: Txn):
+        """Segments whose EVERY staged copy-holder is down (so committing
+        would lose their rows outright).  Returns (primary projection
+        name, sorted segment list) for the affected projection, or None.
+        Replicated projections are covered by the quorum check; K=0
+        projections have no second copy, so a down owner is fatal.
+        Up-but-recovering nodes count as live homes: they receive every
+        commit from the moment they rejoin."""
+        lost: Dict[str, set] = {}
+        for (proj_name, node_id) in txn.staged:
+            if self.nodes[node_id].up:
+                continue
+            proj = self.catalog.projections[proj_name]
+            if proj.segmentation.replicated:
+                continue
+            if proj.buddy_of is not None:
+                seg = (node_id - proj.segmentation.offset) \
+                    % self.catalog.n_nodes
+                partner = (proj.buddy_of, seg)
+                primary = proj.buddy_of
+            else:
+                seg = node_id
+                primary = proj_name
+                buddy = self.catalog.projections.get(proj_name + "_b1")
+                partner = None if buddy is None else \
+                    (buddy.name,
+                     (node_id + buddy.segmentation.offset)
+                     % self.catalog.n_nodes)
+            if partner is None or partner not in txn.staged \
+                    or not self.nodes[partner[1]].up:
+                lost.setdefault(primary, set()).add(seg)
+        if not lost:
+            return None
+        primary = sorted(lost)[0]
+        return primary, sorted(lost[primary])
 
     def rollback(self, txn: Txn):
         txn.staged.clear()
@@ -352,9 +508,12 @@ class VerticaDB:
     # ----------------------------------------------------------- reads --
 
     def segment_owners(self, proj: ProjectionDef) -> Dict[int, str]:
-        """ring-node -> projection (primary or buddy) that can serve it from
-        a live node. Raises AvailabilityError when a segment is lost."""
+        """ring-node -> projection (primary or buddy) that can serve it
+        from a live node.  Raises SegmentUnavailableError carrying the
+        COMPLETE set of lost segments (not just the first) when any
+        segment has no serving replica."""
         owners = {}
+        lost: List[int] = []
         buddy_name = proj.name + "_b1"
         buddy = self.catalog.projections.get(buddy_name)
         for seg_node in range(self.catalog.n_nodes):
@@ -369,12 +528,14 @@ class VerticaDB:
                 if self.nodes[host].serving():
                     owners[seg_node] = buddy_name
                 else:
-                    raise AvailabilityError(
-                        f"segment {seg_node} of {proj.name} unavailable")
+                    lost.append(seg_node)
             else:
-                raise AvailabilityError(
-                    f"segment {seg_node} of {proj.name} unavailable "
-                    f"(K=0)")
+                lost.append(seg_node)
+        if lost:
+            raise SegmentUnavailableError(
+                proj.name, lost,
+                epoch=self.epochs.latest_queryable(),
+                reason="" if buddy is not None else "K=0, no buddy")
         return owners
 
     def read_projection(self, proj_name: str, *,
@@ -387,8 +548,9 @@ class VerticaDB:
         if proj.segmentation.replicated:
             first_up = next((n.id for n in self.nodes if n.serving()), None)
             if first_up is None:
-                raise AvailabilityError(
-                    f"no serving replica of {proj_name}")
+                raise SegmentUnavailableError(
+                    proj_name, range(self.catalog.n_nodes), epoch=as_of,
+                    reason="no serving replica")
             sources = [(first_up, proj_name)]
         else:
             owners = self.segment_owners(proj)
@@ -441,37 +603,54 @@ class VerticaDB:
     def run_tuple_mover(self, *, force_moveout: bool = False,
                         do_mergeout: bool = True):
         stats = {"moveouts": 0, "mergeouts": 0}
-        # recovering nodes count as down here: their LGE must not advance
-        # (they are still missing history) and the AHM must keep the
-        # epochs they will replay
-        any_down = any(not n.serving() for n in self.nodes)
         for node in self.nodes:
             if not node.serving():
                 continue
-            for store in node.stores.values():
-                entry = self.catalog.tables[store.proj.anchor]
-                self.locks.acquire(store.proj.anchor, f"tm-{node.id}", "U")
-                try:
-                    s = run_tuple_mover(
-                        store, sql_types=self._sql_types(store.proj),
-                        ahm=self.epochs.ahm,
-                        partition_expr=entry.partition_expr,
-                        wos_row_limit=0 if force_moveout else 8192,
-                        block_rows=self.block_rows,
-                        do_mergeout=do_mergeout)
-                    stats["moveouts"] += s["moveouts"]
-                    stats["mergeouts"] += s["mergeouts"]
-                finally:
-                    self.locks.release_all(f"tm-{node.id}")
-                # LGE semantics (§5.1): it may only advance to the newest
-                # epoch FULLY persisted in ROS -- rows still in the WOS are
-                # lost on failure, so epochs still buffered there cap it
-                _, wos_eps, _ = store.wos.snapshot()
-                if len(wos_eps):
-                    lge = int(wos_eps.min()) - 1
-                else:
-                    lge = self.epochs.latest_queryable()
-                self.epochs.set_lge(store.proj.name, node.id, lge)
+            try:
+                for store in node.stores.values():
+                    entry = self.catalog.tables[store.proj.anchor]
+                    # injection points fire BEFORE the pass touches the
+                    # store: a crash here simply skips this node's moves
+                    # (the tuple mover is opportunistic, §4.2)
+                    self.faults.fire("tuple_mover.moveout", node=node.id,
+                                     projection=store.proj.name)
+                    if do_mergeout:
+                        self.faults.fire("tuple_mover.mergeout",
+                                         node=node.id,
+                                         projection=store.proj.name)
+                    self.locks.acquire(store.proj.anchor,
+                                       f"tm-{node.id}", "U")
+                    try:
+                        s = run_tuple_mover(
+                            store, sql_types=self._sql_types(store.proj),
+                            ahm=self.epochs.ahm,
+                            partition_expr=entry.partition_expr,
+                            wos_row_limit=0 if force_moveout else 8192,
+                            block_rows=self.block_rows,
+                            do_mergeout=do_mergeout)
+                        stats["moveouts"] += s["moveouts"]
+                        stats["mergeouts"] += s["mergeouts"]
+                    finally:
+                        self.locks.release_all(f"tm-{node.id}")
+                    # LGE semantics (§5.1): it may only advance to the
+                    # newest epoch FULLY persisted in ROS -- rows still in
+                    # the WOS are lost on failure, so epochs buffered
+                    # there cap it
+                    _, wos_eps, _ = store.wos.snapshot()
+                    if len(wos_eps):
+                        lge = int(wos_eps.min()) - 1
+                    else:
+                        lge = self.epochs.latest_queryable()
+                    self.epochs.set_lge(store.proj.name, node.id, lge)
+            except NodeCrashError:
+                continue            # a node died mid-pass; survivors go on
+            except TransientFaultError:
+                continue            # node skipped this pass; next run moves
+        # recovering/down nodes gate the AHM: their LGE must not advance
+        # (they are still missing history) and the AHM must keep the
+        # epochs they will replay.  Computed HERE, after the pass -- a
+        # node crashing mid-pass (fault injection) must gate it too.
+        any_down = any(not n.serving() for n in self.nodes)
         self.epochs.advance_ahm(nodes_down=any_down)
         return stats
 
@@ -511,6 +690,33 @@ class VerticaDB:
         for store in node.stores.values():
             store.wos.clear()          # WOS is memory: lost on failure
             store.wos_delete_epochs = []
+        self._evict_failed_node_slabs(node_id)
+
+    def _evict_failed_node_slabs(self, node_id: int) -> int:
+        """Evict every KIND_SEG slab whose source set references the
+        failed node.  Slab keys embed (host, owner, container-ids) items
+        (engine/segmented._source_sig); a slab sourced from the dead
+        node's placement predates the failover routing and a warm hit on
+        it would silently serve a pre-failure mesh identity."""
+
+        def references_node(key) -> bool:
+            _, col, kind = key
+            if kind != KIND_SEG:
+                return False
+            if not (isinstance(col, tuple) and len(col) >= 3):
+                return True          # unknown key shape: evict, stay safe
+            try:
+                items = col[2][0]
+                return any(host == node_id for host, _owner, _ids in items)
+            except (TypeError, ValueError, IndexError):
+                return True
+        n = 0
+        for proj in self.catalog.projections.values():
+            if proj.buddy_of is not None:
+                continue             # slabs are namespaced by the primary
+            n += self.block_cache.invalidate_where(
+                f"seg:{proj.name}", references_node)
+        return n
 
     def rejoin_node(self, node_id: int):
         """Bring a failed node back ONLINE but not yet SERVING: it starts

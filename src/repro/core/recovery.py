@@ -19,7 +19,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .database import AvailabilityError, VerticaDB
+from .database import (AvailabilityError, RecoverySourceLostError,
+                       VerticaDB)
+from .faults import (NodeCrashError, TransientFaultError,
+                     fire_with_retries)
 from .projection import ProjectionDef
 from .segmentation import rebalance_plan
 from .storage import DeleteVector, ROSContainer, WOS
@@ -209,6 +212,7 @@ def _copy_epoch_range(db: VerticaDB, store: ProjectionStore,
     if hi <= lo:
         return 0, 0
     adopted_ids = set()
+    clone_ids = []
     rows = 0
     for c in src.containers:
         if c.n_rows == 0:
@@ -222,7 +226,13 @@ def _copy_epoch_range(db: VerticaDB, store: ProjectionStore,
                 DeleteVector.build(nc.id, dv.positions,
                                    dv.delete_epochs).to_ros())
         adopted_ids.add(c.id)
+        clone_ids.append(nc.id)
         rows += c.n_rows
+    if clone_ids:
+        # adoption grows the container set exactly like a moveout does:
+        # slabs built before it can never match a future lookup (their
+        # keys lack the new ids) -- free their HBM now, precisely
+        store.invalidate_seg_slabs(require_ids=clone_ids)
     stream = _rows_with_delete_epochs(db, src, lo, hi,
                                       skip_ids=adopted_ids)
     if stream:
@@ -248,13 +258,28 @@ def recover_node(db: VerticaDB, node_id: int, *,
     replayed: Dict[str, int] = {}
     adopted_total = 0
     complete = True
+    failed: Dict[str, Tuple[int, ...]] = {}
+    window_lo: Optional[int] = None
     for proj_name, store in node.stores.items():
         proj = db.catalog.projections[proj_name]
         lge = db.epochs.get_lge(proj_name, node_id)
         # the historical/current boundary must never fall below the LGE or
         # the current phase would re-install rows the node already has
         e_h = max(lge, e_join - historical_lag)
-        src = _buddy_source(db, proj, node_id)
+        try:
+            # injection point fires BEFORE any replay state mutates: a
+            # crash or exhausted transient here leaves this projection
+            # cleanly un-replayed (its per-projection LGE is untouched,
+            # so a later recover_node retry is idempotent)
+            fire_with_retries(db, "recovery.replay", node=node_id,
+                              projection=proj_name)
+            src = _buddy_source(db, proj, node_id)
+        except NodeCrashError as e:
+            if e.node == node_id:
+                raise       # the recovering node itself died again
+            src = None      # the replay source crashed under us
+        except TransientFaultError:
+            src = None      # buddy unreachable after the retry budget
         if src is None:
             # no live replay source.  With K=0 (no buddy exists) there is
             # nothing to ever replay from -- proceed.  But if a buddy
@@ -263,6 +288,9 @@ def recover_node(db: VerticaDB, node_id: int, *,
             # in recovering state so a later recover_node can retry.
             if lge < e_join and _replay_source_exists(db, proj):
                 complete = False
+                failed[proj_name] = (node_id,)
+                window_lo = lge if window_lo is None \
+                    else min(window_lo, lge)
             continue
         # historical phase: (LGE, e_h], no locks
         total = 0
@@ -292,7 +320,14 @@ def recover_node(db: VerticaDB, node_id: int, *,
         node.recovering = False
         node.rejoin_epoch = None
         node.stale_since = None
-    return replayed
+        return replayed
+    # LOUD incomplete (never silently partial): the node STAYS in
+    # recovering state -- buddies keep serving its segments where they
+    # can, commits keep landing on it, and a later recover_node retry
+    # (once the replay source is back) completes.  The typed error
+    # carries exactly which projections/segments still owe which epochs.
+    raise RecoverySourceLostError(node_id, failed,
+                                  window=(window_lo, e_join))
 
 
 def _replay_source_exists(db: VerticaDB, proj: ProjectionDef) -> bool:
@@ -310,11 +345,15 @@ def _buddy_source(db: VerticaDB, proj: ProjectionDef,
                   node_id: int) -> Optional[ProjectionStore]:
     """The live store that holds this node's rows: the buddy projection's
     store on the offset node (or, for a buddy/replicated projection, the
-    primary's)."""
+    primary's).  Opening the source is an injection point
+    (``recovery.buddy_read``): transients retry with backoff; a crash or
+    an exhausted budget propagates for recover_node to record the
+    projection as source-lost."""
     if proj.segmentation.replicated:
         for n in db.nodes:
             if n.serving() and n.id != node_id:
-                return n.stores[proj.name]
+                return _open_source(db, n.id, proj.name,
+                                    n.stores[proj.name])
         return None
     if proj.buddy_of is not None:
         primary = db.catalog.projections[proj.buddy_of]
@@ -322,15 +361,24 @@ def _buddy_source(db: VerticaDB, proj: ProjectionDef,
         src_node = db.nodes[(node_id - proj.segmentation.offset)
                             % db.catalog.n_nodes]
         if src_node.serving():
-            return src_node.stores[primary.name]
+            return _open_source(db, src_node.id, primary.name,
+                                src_node.stores[primary.name])
         return None
     buddy = db.catalog.projections.get(proj.name + "_b1")
     if buddy is None:
         return None
     host = (node_id + buddy.segmentation.offset) % db.catalog.n_nodes
     if db.nodes[host].serving():
-        return db.nodes[host].stores[buddy.name]
+        return _open_source(db, host, buddy.name,
+                            db.nodes[host].stores[buddy.name])
     return None
+
+
+def _open_source(db: VerticaDB, host: int, proj_name: str,
+                 store: ProjectionStore) -> ProjectionStore:
+    fire_with_retries(db, "recovery.buddy_read", node=host,
+                      projection=proj_name)
+    return store
 
 
 def refresh_projection(db: VerticaDB, proj_name: str):

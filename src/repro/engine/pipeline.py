@@ -121,6 +121,13 @@ class ExecStats:
     seg_slab: str = ""              # ROS slab "hit"/"miss", "+wos" when a
     #                                 trickle-load delta slab was appended
     snapshot_epoch: int = 0         # pinned cluster snapshot this query read
+    # fault/failover telemetry (core/faults.py): failovers = mid-query
+    # node crashes absorbed by replanning onto buddies at the pinned
+    # epoch; fault_retries = transient-fault attempt retries; injected =
+    # fault actions fired while this query ran
+    failovers: int = 0
+    fault_retries: int = 0
+    faults_injected: int = 0
 
 
 def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
@@ -145,26 +152,73 @@ def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
         mesh = getattr(db, "mesh", None)
         mesh_axis = getattr(db, "mesh_axis", mesh_axis)
     frontend_s = time.time() - t0
+    from ..core.database import QueryRejectedError
+    from ..core.faults import NodeCrashError, TransientFaultError
+
     stats = ExecStats(projection=plan.projection,
                       groupby_algorithm=plan.groupby_algorithm,
                       join_strategy=plan.join_strategy,
                       frontend_s=frontend_s)
+    faults = getattr(db, "faults", None)
+    f0 = faults.total_fired if faults is not None else 0
     # pin the cluster snapshot epoch for the query's lifetime (§5):
     # trickle-load commits advancing the epoch concurrently cannot shift
-    # what this query sees, and the AHM cannot purge the history it reads
+    # what this query sees, and the AHM cannot purge the history it
+    # reads.  EVERYTHING past the pin -- including failover replans --
+    # runs inside the try so no failure path can leak a pin and freeze
+    # the AHM forever.
     as_of = db.epochs.pin(as_of)
-    stats.snapshot_epoch = as_of
-    bc = db.block_cache.stats
-    bc_h0, bc_m0 = bc.hits, bc.misses
+    try:
+        stats.snapshot_epoch = as_of
+        bc = db.block_cache.stats
+        bc_h0, bc_m0 = bc.hits, bc.misses
 
-    def _finish(out, *, final: bool = True):
-        if final:
-            out = _finalize(q, out)
-        stats.block_cache_hits = bc.hits - bc_h0
-        stats.block_cache_misses = bc.misses - bc_m0
-        stats.wall_s = time.time() - t0
-        return out, stats
+        def _finish(out, *, final: bool = True):
+            if final:
+                out = _finalize(q, out)
+            stats.block_cache_hits = bc.hits - bc_h0
+            stats.block_cache_misses = bc.misses - bc_m0
+            if faults is not None:
+                stats.faults_injected = faults.total_fired - f0
+            stats.wall_s = time.time() - t0
+            return out, stats
 
+        retries_left = int(getattr(db, "max_failover_retries", 2))
+        while True:
+            try:
+                return _execute_attempt(db, q, plan, as_of, mesh,
+                                        mesh_axis, stats, _finish)
+            except NodeCrashError as e:
+                # mid-query node failure: bounded query-level failover.
+                # Replan at the SAME pinned epoch -- the planner routes
+                # the dead node's segments to buddies (identical rows at
+                # as_of, §4.3), so the retried query reads the identical
+                # snapshot; exhausted redundancy surfaces the planner's
+                # SegmentUnavailableError instead.
+                stats.failovers += 1
+                if retries_left <= 0:
+                    raise QueryRejectedError(
+                        f"failover budget exhausted (node {e.node} "
+                        f"crashed at {e.point})",
+                        epoch=as_of, attempts=stats.failovers) from e
+                retries_left -= 1
+                plan = plan_query(db, q)
+                stats.projection = plan.projection
+                stats.groupby_algorithm = plan.groupby_algorithm
+                stats.join_strategy = plan.join_strategy
+            except TransientFaultError as e:
+                # per-point retry budgets already ran (faults.with_retries)
+                raise QueryRejectedError(
+                    f"transient retry budget exhausted: {e}",
+                    epoch=as_of, attempts=stats.failovers) from e
+    finally:
+        db.epochs.unpin(as_of)
+
+
+def _execute_attempt(db: VerticaDB, q: LogicalQuery, plan, as_of: int,
+                     mesh, mesh_axis: str, stats: ExecStats, _finish):
+    """One execution attempt of a pinned-epoch query (the body of
+    ``execute``'s failover retry loop)."""
     try:
         # --- segmented multi-device path (explicit opt-in via mesh) ---
         if mesh is not None:
@@ -260,7 +314,10 @@ def execute(db: VerticaDB, q, *, as_of: Optional[int] = None,
                    if (c in keep) or (not keep and c != "_matched")}
         return _finish(out)
     finally:
-        db.epochs.unpin(as_of)
+        # per-attempt bookkeeping only; the epoch pin is released by
+        # ``execute`` (one pin covers every failover attempt, so the
+        # retried query replans at the identical snapshot)
+        pass
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.block_cache import KIND_SEG
 from ..core.database import VerticaDB
+from ..core.faults import fire_with_retries, with_retries
 from ..core.segmentation import hash_columns, shard_of
 from ..planner import cost as cost_mod
 from . import exchange
@@ -301,6 +302,15 @@ def _sharded_scan(db: VerticaDB, proj, plan, need, reseg_keys, as_of: int,
     tuple mover) while pending WOS rows are slabbed fresh per query and
     appended shard-locally -- a trickle-load commit therefore costs one
     small WOS re-slab, never a whole-projection repartition."""
+    # injection points: one per source store feeding the slab.  A crash
+    # here fails the host node and escalates to query-level failover (the
+    # retry replans onto buddy stores); transients retry in place.
+    for host, owner in plan.sources:
+        point = "segmented.buddy_read" \
+            if db.catalog.projections[owner].buddy_of is not None \
+            else "segmented.slab_build"
+        fire_with_retries(db, point, stats=stats, node=host,
+                          projection=owner)
     cache = getattr(db, "block_cache", None)
     ros = None
     if cache is None:
@@ -410,7 +420,7 @@ def _place_one_build(db: VerticaDB, spec, exch: str,
 
 
 def _place_builds(db: VerticaDB, q: LogicalQuery, plan, as_of: int, mesh,
-                  axis: str, n_shards: int
+                  axis: str, n_shards: int, stats=None
                   ) -> Tuple[List[Dict[str, jax.Array]], List, List[Dict]]:
     """Returns (placed build dicts, per-join shard_map specs, per-join
     dim-column bounds).  Placed builds are cached device-side keyed by
@@ -427,6 +437,11 @@ def _place_builds(db: VerticaDB, q: LogicalQuery, plan, as_of: int, mesh,
             spec.dim_table).segmentation.replicated
         specs.append(P() if exch == "broadcast"
                      or (exch == "local" and replicated_dim) else P(axis))
+        if exch == "broadcast":
+            # the all_gather of the small build side is a collective too:
+            # a crash/transient here follows the same taxonomy
+            fire_with_retries(db, "exchange.broadcast", stats=stats,
+                              join=spec.dim_table)
 
         def make(spec=spec, exch=exch, build=build,
                  replicated_dim=replicated_dim):
@@ -638,7 +653,7 @@ def execute_segmented(db: VerticaDB, q: LogicalQuery, plan, as_of: int,
     stats.rows_scanned = slab["n_rows"]
 
     builds, build_specs, build_bounds = _place_builds(
-        db, q, plan, as_of, mesh, axis, n_shards)
+        db, q, plan, as_of, mesh, axis, n_shards, stats)
 
     # ---- static pack radices for the group keys (exact host bounds) ----
     aggs = tuple(q.aggs)
@@ -705,8 +720,11 @@ def execute_segmented(db: VerticaDB, q: LogicalQuery, plan, as_of: int,
                 payload[f"__d:{k2}"] = d2
             moved = slot_valid = None
             for _attempt in range(2):
-                moved, slot_valid, overflow = exchange.resegment(
-                    mesh, axis, payload, dest, per_new * n_shards)
+                moved, slot_valid, overflow = with_retries(
+                    db, "exchange.resegment",
+                    lambda: exchange.resegment(mesh, axis, payload, dest,
+                                               per_new * n_shards),
+                    stats=stats, join=spec.dim_table)
                 ov = int(np.asarray(overflow).sum())
                 if ov == 0:
                     break

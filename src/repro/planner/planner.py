@@ -113,6 +113,12 @@ def plan_query(db: VerticaDB, q) -> PhysicalPlan:
                     owner_proj].segmentation.offset) % db.catalog.n_nodes
             if (host, owner_proj) not in plan.sources:
                 plan.sources.append((host, owner_proj))
+        n_buddy = sum(1 for _, o in plan.sources
+                      if db.catalog.projections[o].buddy_of is not None)
+        if n_buddy:
+            plan.explain.append(
+                f"failover routing: {n_buddy}/{len(plan.sources)} "
+                f"source(s) served by buddy projections (K-safety)")
 
     # join strategy + SIP + exchange op, one decision per join edge.  The
     # probe side's *placement* (which columns its rows are currently

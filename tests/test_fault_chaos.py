@@ -1,0 +1,238 @@
+"""Chaos property tests: random seeded fault schedules spliced into the
+differential query corpus and the DML/recovery stream.
+
+THE invariant (the whole point of typed degradation): under ANY fault
+schedule, every query either returns the byte-identical answer the
+never-failed cluster returns, or raises a typed AvailabilityError --
+never, ever a silently wrong answer.
+
+Seeds come from ``REPRO_CHAOS_SEEDS`` (comma-separated ints) so the
+verify.sh chaos tier pins an exact reproducible schedule; default is a
+small fixed set to keep tier-1 fast.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AvailabilityError, CrashNode, RecoverySourceLostError,
+                        Transient, VerticaDB)
+from repro.core.faults import NodeCrashError
+from repro.core.recovery import recover_node
+from repro.engine import col, execute
+
+from test_crash_replay_props import (N_KEYS, _agg, _apply, _mk_db,
+                                     _commit_batch, _tuples)
+from test_segmented_exec import assert_match, gen_query, make_db
+
+CHAOS_SEEDS = tuple(
+    int(s) for s in os.environ.get("REPRO_CHAOS_SEEDS", "11,23").split(","))
+
+# every query-path injection point the chaos schedule may hit
+QUERY_POINTS = ("segmented.slab_build", "segmented.buddy_read",
+                "exchange.resegment", "exchange.broadcast")
+DML_POINTS = ("commit.apply", "tuple_mover.moveout",
+              "tuple_mover.mergeout")
+
+
+def repair_all(db, suspend=True):
+    """Bring every node back to serving, retrying so interdependent buddy
+    pairs recover in whatever order works.  ``suspend=False`` leaves the
+    injector live, so recovery-path faults (transient buddy reads) are
+    exercised too -- they surface as RecoverySourceLostError and the next
+    round retries."""
+    import contextlib
+    cm = db.faults.suspended() if suspend else contextlib.nullcontext()
+    with cm:
+        for _ in range(6):
+            pending = [n.id for n in db.nodes if not n.serving()]
+            if not pending:
+                return
+            for nid in pending:
+                try:
+                    recover_node(db, nid)
+                except RecoverySourceLostError:
+                    continue          # its source recovers a later round
+    assert all(n.serving() for n in db.nodes), "cluster unrepairable"
+
+
+# ---------------------------------------------------------------------------
+# targeted: a crash at each query-path point fails over transparently
+# ---------------------------------------------------------------------------
+
+def _point_query(db, point):
+    if point == "exchange.resegment":       # parts is the resegment join
+        return (db.query("sales")
+                .join("parts", on=("partkey", "p_partkey"), cols=("p_cat",))
+                .group_by("p_cat").agg(n=("*", "count")))
+    if point == "exchange.broadcast":       # promo is the broadcast join
+        return (db.query("sales")
+                .join("promo", on=("day", "pr_day"), cols=("pr_kind",))
+                .group_by("pr_kind").agg(n=("*", "count")))
+    return (db.query("sales").group_by("suppkey")
+            .agg(n=("*", "count"), s=("qty", "sum")))
+
+
+@pytest.mark.parametrize("point", ("segmented.slab_build",
+                                   "exchange.resegment",
+                                   "exchange.broadcast"))
+def test_mid_query_crash_fails_over_per_point(point):
+    db = make_db()
+    db.attach_mesh()
+    try:
+        qb = _point_query(db, point)
+        ref, _ = execute(db, qb.to_ir())
+        inj = db.enable_faults(seed=13)
+        inj.on(point, CrashNode(), hit=1)
+        out, stats = execute(db, qb.to_ir())    # no error may surface
+        assert stats.failovers >= 1, point
+        assert stats.faults_injected >= 1
+        assert not db.epochs.pins
+        assert_match(ref, out, ordered=False, label=point)
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+
+
+def test_failover_retries_at_pinned_epoch():
+    """A commit that lands BETWEEN the crash and the retry must stay
+    invisible: the failover replans at the query's pinned snapshot."""
+    db = make_db()
+    db.attach_mesh()
+
+    class CommitThenCrash:
+        def __call__(self, action_db, point, ctx, rng):
+            with action_db.faults.suspended():
+                t = action_db.begin()
+                action_db.insert(t, "sales", {
+                    "sale_id": np.arange(50000, 50100, dtype=np.int64),
+                    "custkey": np.zeros(100, np.int64),
+                    "suppkey": np.zeros(100, np.int64),
+                    "partkey": np.zeros(100, np.int64),
+                    "day": np.zeros(100, np.int64),
+                    "qty": np.ones(100, np.int64),
+                    "delta": np.zeros(100, np.int64),
+                    "price": np.ones(100)})
+                action_db.commit(t)
+            action_db.fail_node(1)
+            raise NodeCrashError(1, point)
+
+    try:
+        qb = db.query("sales").agg(n=("*", "count"))
+        ref, _ = execute(db, qb.to_ir())
+        assert int(ref["n"][0]) == 4000
+        inj = db.enable_faults(seed=1)
+        inj.on("segmented.slab_build", CommitThenCrash(), hit=1)
+        out, stats = execute(db, qb.to_ir())
+        assert stats.failovers == 1
+        # the retry saw the PINNED snapshot: 4000 rows, not 4100
+        assert int(out["n"][0]) == 4000
+        db.disable_faults()
+        # a fresh query (new pin) sees the mid-flight commit
+        out2, _ = execute(db, qb.to_ir())
+        assert int(out2["n"][0]) == 4100
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+
+
+# ---------------------------------------------------------------------------
+# chaos over the differential query corpus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chaos_seed", CHAOS_SEEDS)
+def test_chaos_query_corpus_right_or_typed_error(chaos_seed):
+    """The 20-query differential corpus under a seeded probabilistic
+    fault schedule: every query matches the never-failed oracle exactly,
+    or raises a typed AvailabilityError.  Zero wrong answers."""
+    db = make_db()
+    rng = np.random.default_rng(2024)
+    corpus = [gen_query(db, rng) for _ in range(20)]
+
+    # never-failed oracle answers first (no faults, single-node)
+    db.detach_mesh()
+    refs = [execute(db, qb.to_ir())[0] for qb in corpus]
+
+    inj = db.enable_faults(seed=chaos_seed)
+    inj.chaos(QUERY_POINTS, p=0.04)                       # seeded crashes
+    inj.chaos(QUERY_POINTS, p=0.10, action=Transient())   # seeded blips
+    db.attach_mesh()
+    typed, matched = 0, 0
+    try:
+        for i, qb in enumerate(corpus):
+            repair_all(db)
+            ir = qb.to_ir()
+            try:
+                out, _ = execute(db, ir)
+            except AvailabilityError:
+                typed += 1            # loud, typed degradation: allowed
+                continue
+            matched += 1
+            assert_match(refs[i], out, ordered=bool(ir.order_by),
+                         label=f"chaos{chaos_seed}-q{i}")
+            assert not db.epochs.pins
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+    assert matched > 0                # the schedule must not reject all
+    assert inj.hit_count("segmented.slab_build") > 0
+
+
+# ---------------------------------------------------------------------------
+# chaos over the DML / tuple-mover / recovery stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chaos_seed", CHAOS_SEEDS)
+def test_chaos_dml_stream_equals_never_failed(chaos_seed):
+    """A trickle-load + delete + tuple-mover stream with seeded crashes
+    and transients spliced into commit/mover/recovery paths converges to
+    byte-identical state with the never-failed reference cluster."""
+    rng = np.random.default_rng(chaos_seed)
+    ref = _mk_db()
+    crashy = _mk_db()
+    base = 0
+    for db in (ref, crashy):
+        _commit_batch(db, 7, base)
+        db.run_tuple_mover(force_moveout=True)
+    base += 10 ** 6
+
+    inj = crashy.enable_faults(seed=chaos_seed)
+    # K=1 tolerates exactly one failure: a buddy-pair double crash loses
+    # both WOS copies of a segment (cluster-down by design), so the DML
+    # chaos schedule crashes at most one node at a time
+    inj.chaos(DML_POINTS, p=0.05,
+              action=CrashNode(respect_k_safety=True))
+    inj.chaos(DML_POINTS + ("recovery.replay", "recovery.buddy_read"),
+              p=0.08, action=Transient())
+    try:
+        for k in range(12):
+            kind = ("commit", "commit", "delete", "moveout",
+                    "mover")[int(rng.integers(5))]
+            op = (kind, int(rng.integers(2 ** 20)))
+            _apply(ref, op, base)
+            for attempt in range(4):
+                try:
+                    _apply(crashy, op, base)
+                    break
+                except AvailabilityError:
+                    # a refused commit must not half-apply: repair and
+                    # re-apply the SAME op so both streams stay aligned
+                    # (chaos may refuse the retry again; budget of 4)
+                    assert attempt < 3, "op refused 4 times"
+                    repair_all(crashy)
+            base += 10 ** 6
+            repair_all(crashy, suspend=False)   # recovery faults live
+    finally:
+        crashy.disable_faults()
+    repair_all(crashy)
+
+    assert _tuples(crashy.read_table("events")) == \
+        _tuples(ref.read_table("events"))
+    assert _agg(crashy) == _agg(ref)
+    # every node serves its own segments again: knock each buddy host
+    # out in turn on clones of the final state and compare
+    expect = _tuples(ref.read_table("events"))
+    for node in range(4):
+        crashy.fail_node(node)
+        assert _tuples(crashy.read_table("events")) == expect, node
+        recover_node(crashy, node)

@@ -1,0 +1,329 @@
+"""Deterministic fault-injection harness: schedules, retry/degradation
+taxonomy, mid-query failover, typed availability errors, cache hygiene.
+
+Single-fault unit coverage lives here; the randomized chaos property
+tests (never a wrong answer, only right-or-typed-error) are in
+test_fault_chaos.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AvailabilityError, ColumnDef, CrashNode,
+                        FaultInjector, Hang, QueryRejectedError,
+                        RecoverySourceLostError, SQLType,
+                        SegmentUnavailableError, TableSchema, Transient,
+                        TransientFaultError, VerticaDB)
+from repro.core.block_cache import KIND_SEG
+from repro.core.recovery import recover_node
+from repro.engine import col, execute
+
+from test_segmented_exec import assert_match, make_db
+
+
+def _tuples(rows):
+    cols = sorted(rows)
+    return sorted(zip(*[np.asarray(rows[c]).tolist() for c in cols]))
+
+
+# ---------------------------------------------------------------------------
+# the injector itself: deterministic schedules
+# ---------------------------------------------------------------------------
+
+def test_nth_hit_schedule_fires_exactly_once():
+    inj = FaultInjector(seed=1)
+    inj.on("x", Transient(), hit=3)
+    for k in range(1, 6):
+        if k == 3:
+            with pytest.raises(TransientFaultError):
+                inj.fire("x")
+        else:
+            inj.fire("x")
+    assert inj.fired("x") == 1
+    assert inj.hit_count("x") == 5
+
+
+def test_node_filter_and_times_window():
+    inj = FaultInjector(seed=1)
+    inj.on("p", Transient(), node=2, times=2)
+    inj.fire("p", node=0)
+    inj.fire("p", node=1)          # other nodes never match
+    for _ in range(2):
+        with pytest.raises(TransientFaultError):
+            inj.fire("p", node=2)
+    inj.fire("p", node=2)          # times=2 exhausted
+    assert inj.fired("p") == 2
+
+
+def test_probabilistic_rules_are_seed_deterministic():
+    def run(seed):
+        inj = FaultInjector(seed=seed)
+        inj.on("x", Transient(), p=0.4)
+        pattern = []
+        for _ in range(40):
+            try:
+                inj.fire("x")
+                pattern.append(0)
+            except TransientFaultError:
+                pattern.append(1)
+        return pattern
+
+    a, b = run(123), run(123)
+    assert a == b and sum(a) > 0     # identical schedule, some firings
+    assert run(7) != a               # a different seed reschedules
+
+
+def test_suspended_pauses_without_resetting_counters():
+    inj = FaultInjector(seed=1)
+    inj.on("x", Transient(), hit=2)
+    inj.fire("x")
+    with inj.suspended():
+        inj.fire("x")                # counted as a hit, never fires
+        inj.fire("x")
+    assert inj.fired("x") == 0
+    assert inj.hit_count("x") == 3
+
+
+# ---------------------------------------------------------------------------
+# retry taxonomy through a real query (1-device degenerate mesh is fine)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fault_db():
+    return make_db()
+
+
+def _count_query(db):
+    return db.query("sales").agg(n=("*", "count"))
+
+
+def test_transient_faults_retry_in_place(fault_db):
+    db = fault_db
+    db.attach_mesh()
+    try:
+        ref, _ = execute(db, _count_query(db).to_ir())
+        inj = db.enable_faults(seed=3)
+        inj.on("segmented.slab_build", Transient(), times=2)
+        out, stats = execute(db, _count_query(db).to_ir())
+        assert stats.fault_retries >= 2
+        assert stats.failovers == 0
+        assert_match(ref, out, ordered=False, label="transient")
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+
+
+def test_hang_converts_to_timeout_and_retries(fault_db):
+    db = fault_db
+    db.attach_mesh()
+    try:
+        ref, _ = execute(db, _count_query(db).to_ir())
+        inj = db.enable_faults(seed=3, attempt_timeout_s=0.01)
+        inj.on("segmented.slab_build", Hang(0.05), times=1)
+        out, stats = execute(db, _count_query(db).to_ir())
+        assert stats.fault_retries >= 1      # the timed-out attempt
+        assert_match(ref, out, ordered=False, label="hang")
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+
+
+def test_exhausted_transients_reject_query_and_release_pin(fault_db):
+    db = fault_db
+    db.attach_mesh()
+    try:
+        inj = db.enable_faults(seed=3)
+        inj.on("segmented.slab_build", Transient())   # every attempt
+        with pytest.raises(QueryRejectedError) as exc:
+            execute(db, _count_query(db).to_ir())
+        assert exc.value.epoch is not None
+        assert not db.epochs.pins              # pin released on failure
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+
+
+def test_mid_query_crash_fails_over_at_pinned_epoch(fault_db):
+    db = fault_db
+    db.attach_mesh()
+    try:
+        qb = (db.query("sales").where(col("day") < 200)
+              .group_by("suppkey").agg(n=("*", "count"),
+                                       s=("qty", "sum")))
+        ref, _ = execute(db, qb.to_ir())
+        inj = db.enable_faults(seed=3)
+        inj.on("segmented.slab_build", CrashNode(), node=1, hit=1)
+        out, stats = execute(db, qb.to_ir())     # no error surfaces
+        assert stats.failovers == 1
+        assert not db.nodes[1].up
+        assert not db.epochs.pins
+        assert_match(ref, out, ordered=False, label="failover")
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+        if not db.nodes[1].serving():        # repair the shared fixture
+            recover_node(db, 1)
+
+
+def test_failover_budget_exhaustion_is_typed(fault_db):
+    db = fault_db
+    db.attach_mesh()
+    try:
+        inj = db.enable_faults(seed=3)
+        # every attempt crashes another node: 1 initial + 2 failovers
+        # burns the budget, the 4th node loss surfaces as a rejection
+        inj.on("segmented.slab_build", CrashNode())
+        with pytest.raises((QueryRejectedError, AvailabilityError)) as exc:
+            execute(db, _count_query(db).to_ir())
+        if isinstance(exc.value, QueryRejectedError):
+            assert exc.value.attempts >= 1
+        assert not db.epochs.pins
+    finally:
+        db.disable_faults()
+        db.detach_mesh()
+        for n in db.nodes:                   # repair the shared fixture
+            if not n.serving():
+                recover_node(db, n.id)
+
+
+# ---------------------------------------------------------------------------
+# commit-path and recovery-path faults (typed degradation, K-safety)
+# ---------------------------------------------------------------------------
+
+def test_mid_commit_crash_ejects_node_commit_survives(sales_db):
+    db, _ = sales_db
+    before = _tuples(db.read_table("sales"))
+    new = {"sale_id": np.arange(9000, 9050),
+           "cid": np.full(50, 21, np.int64),
+           "date": np.full(50, 123, np.int64),
+           "price": np.ones(50)}
+    inj = db.enable_faults(seed=5)
+    inj.on("commit.apply", CrashNode(), node=2, hit=1)
+    t = db.begin()
+    db.insert(t, "sales", new)
+    db.commit(t)                     # quorum commit: survivors proceed
+    db.disable_faults()
+    assert not db.nodes[2].up
+    expect = sorted(before + _tuples(new))
+    assert _tuples(db.read_table("sales")) == expect
+    recover_node(db, 2)              # replay brings node 2 current
+    assert _tuples(db.read_table("sales")) == expect
+    db.fail_node(3)                  # node 2 must now serve seg 2 itself
+    assert _tuples(db.read_table("sales")) == expect
+
+
+def test_commit_refused_when_staged_segment_loses_all_copies():
+    """Both copy-holders of a staged segment die during commit phase 1:
+    the WHOLE commit is refused (typed), nothing is applied anywhere, and
+    after repair the same batch commits cleanly.  5 nodes so quorum
+    (3) still holds with the buddy pair 1+2 down -- the refusal comes
+    from the redundancy check, not the quorum check."""
+    db = VerticaDB(n_nodes=5, k_safety=1, block_rows=64)
+    db.create_table(TableSchema("events", (
+        ColumnDef("eid"), ColumnDef("val", SQLType.FLOAT))),
+        sort_order=("eid",), segment_by=("eid",))
+    seed = {"eid": np.arange(200, dtype=np.int64),
+            "val": np.ones(200)}
+    t = db.begin()
+    db.insert(t, "events", seed)
+    db.commit(t)
+    db.run_tuple_mover(force_moveout=True)
+    before = _tuples(db.read_table("events"))
+
+    inj = db.enable_faults(seed=2)
+    inj.on("commit.apply", CrashNode(), node=1, hit=1)
+    inj.on("commit.apply", CrashNode(), node=2, hit=1)
+    batch = {"eid": np.arange(1000, 1200, dtype=np.int64),
+             "val": np.full(200, 2.0)}
+    t = db.begin()
+    db.insert(t, "events", batch)
+    with pytest.raises(SegmentUnavailableError) as exc:
+        db.commit(t)
+    db.disable_faults()
+    assert 1 in exc.value.segments
+    assert not db.nodes[1].up and not db.nodes[2].up
+    # clean abort: nothing missed, recovery is trivial even with the
+    # buddy still down, and the visible state is exactly the old one
+    recover_node(db, 1)
+    recover_node(db, 2)
+    assert _tuples(db.read_table("events")) == before
+    # the identical batch now commits fine
+    t = db.begin()
+    db.insert(t, "events", batch)
+    db.commit(t)
+    assert _tuples(db.read_table("events")) == \
+        sorted(before + _tuples(batch))
+
+
+def test_double_buddy_failure_raises_typed_segment_error(sales_db):
+    db, _ = sales_db
+    oracle = _tuples(db.read_table("sales"))
+    db.fail_node(1)
+    db.fail_node(2)                  # node 2 hosted segment 1's buddy
+    with pytest.raises(SegmentUnavailableError) as exc:
+        db.read_table("sales")
+    assert 1 in exc.value.segments
+    assert exc.value.projection == "sales_super"
+    # rejoin + recover restores full service, byte-identical to oracle
+    recover_node(db, 2)              # seg 2 replays from buddy on node 3
+    recover_node(db, 1)
+    assert _tuples(db.read_table("sales")) == oracle
+    db.fail_node(0)                  # spot-check failover still works
+    assert _tuples(db.read_table("sales")) == oracle
+
+
+def test_recovery_replay_source_crash_is_typed(sales_db):
+    db, _ = sales_db
+    db.fail_node(1)
+    t = db.begin()
+    db.insert(t, "sales", {"sale_id": np.arange(9900, 9950),
+                           "cid": np.full(50, 17, np.int64),
+                           "date": np.full(50, 77, np.int64),
+                           "price": np.ones(50)})
+    db.commit(t)
+    db.run_tuple_mover(force_moveout=True)
+    oracle = _tuples(db.read_table("sales"))
+    inj = db.enable_faults(seed=9)
+    # the replay source (node 2 holds seg 1's buddy) dies mid-replay
+    inj.on("recovery.buddy_read", CrashNode(), node=2, hit=1)
+    with pytest.raises(RecoverySourceLostError) as exc:
+        recover_node(db, 1)
+    db.disable_faults()
+    assert exc.value.node == 1 and 1 in exc.value.segments
+    assert db.nodes[1].recovering    # stays recovering: retryable
+    recover_node(db, 2)
+    recover_node(db, 1)              # retry completes once buddy is back
+    assert _tuples(db.read_table("sales")) == oracle
+
+
+# ---------------------------------------------------------------------------
+# cache hygiene: fail_node evicts slabs built over the dead node's stores
+# ---------------------------------------------------------------------------
+
+def test_fail_node_evicts_stale_seg_slabs():
+    db = make_db()
+    db.attach_mesh()
+    try:
+        execute(db, db.query("sales").group_by("suppkey")
+                .agg(n=("*", "count")).to_ir())   # warm a KIND_SEG slab
+
+        def seg_keys_touching(node):
+            out = []
+            for key in db.block_cache.keys():
+                cid, colk, kind = key
+                if kind != KIND_SEG:
+                    continue
+                items = colk[2][0]
+                if any(host == node for host, _o, _ids in items):
+                    out.append(key)
+            return out
+
+        assert seg_keys_touching(1), "warm slab should reference node 1"
+        db.fail_node(1)
+        assert not seg_keys_touching(1), \
+            "failed node's slabs must be evicted"
+        # and the rebuilt slab (buddy routing) still answers correctly
+        out, stats = execute(db, db.query("sales").group_by("suppkey")
+                             .agg(n=("*", "count")).to_ir())
+        assert int(np.asarray(out["n"]).sum()) == 4000
+    finally:
+        db.detach_mesh()

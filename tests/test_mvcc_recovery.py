@@ -2,8 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import (AvailabilityError, ColumnDef, TableSchema,
-                        VerticaDB)
+from repro.core import (AvailabilityError, ColumnDef,
+                        RecoverySourceLostError, TableSchema, VerticaDB)
 from repro.core.recovery import backup, rebalance, recover_node, restore
 
 
@@ -102,7 +102,9 @@ def test_recovery_waits_for_buddy_source(sales_db):
     serving with its missed epochs unreplayed: it stays in recovering
     state (loud AvailabilityError on reads of its segments, never a
     silently incomplete answer) and a later recover_node retry -- once
-    the buddy is back -- completes."""
+    the buddy is back -- completes.  The incomplete recovery is now a
+    typed RecoverySourceLostError naming exactly which projections and
+    segments have no replay source."""
     db, _ = sales_db
     db.fail_node(1)
     t = db.begin()
@@ -114,7 +116,11 @@ def test_recovery_waits_for_buddy_source(sales_db):
     db.run_tuple_mover(force_moveout=True)   # persist to buddy ROS
     expect = _tuples(db.read_table("sales"))
     db.fail_node(2)                # hosts node 1's buddy segments
-    recover_node(db, 1)
+    with pytest.raises(RecoverySourceLostError) as exc:
+        recover_node(db, 1)
+    assert exc.value.node == 1
+    assert 1 in exc.value.segments
+    assert "sales_super" in exc.value.projections
     assert db.nodes[1].up and db.nodes[1].recovering
     assert db.nodes[1].last_recovery["complete"] is False
     with pytest.raises(AvailabilityError):
