@@ -5,12 +5,14 @@
   encoded_exec      -> §6.1 operate-on-encoded-data ablation
   tuple_mover_bench -> §4 ingest/merge behaviour
   distribution      -> §3.6/§6.2 join locality decisions + Send/Recv
+  serving           -> §7 concurrent serving: closed-loop latency/qps
   roofline          -> §Roofline reader over results/dryrun/
 
 Writes results/bench/results.json and prints a summary per benchmark.
 After a cstore_queries run, also writes repo-root BENCH_cstore.json (the
 headline perf numbers: cold/warm totals, speedups, disk ratio) so the
-perf trajectory is tracked PR-over-PR.
+perf trajectory is tracked PR-over-PR; a serving run likewise writes
+BENCH_serving.json (p50/p95/p99, throughput, shared-scan hit rate).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [name ...]
   --quick: CI-smoke sizes (small N_FACT) via REPRO_BENCH_QUICK=1
@@ -27,13 +29,15 @@ OUT = ROOT / "results" / "bench"
 
 def main() -> None:
     from benchmarks import (compression, cstore_queries, distribution,
-                            encoded_exec, roofline, tuple_mover_bench)
+                            encoded_exec, roofline, serving,
+                            tuple_mover_bench)
     mods = {
         "compression": compression,
         "cstore_queries": cstore_queries,
         "encoded_exec": encoded_exec,
         "tuple_mover_bench": tuple_mover_bench,
         "distribution": distribution,
+        "serving": serving,
         "roofline": roofline,
     }
     args = sys.argv[1:]
@@ -76,6 +80,11 @@ def main() -> None:
         (ROOT / "BENCH_cstore.json").write_text(
             json.dumps(bench, indent=1) + "\n")
         print(f"[run] wrote {ROOT/'BENCH_cstore.json'}")
+    srv = results.get("serving/closed_loop")
+    if srv is not None and "serving" in names:
+        (ROOT / "BENCH_serving.json").write_text(
+            json.dumps(srv, indent=1) + "\n")
+        print(f"[run] wrote {ROOT/'BENCH_serving.json'}")
 
 
 if __name__ == '__main__':

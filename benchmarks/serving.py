@@ -1,0 +1,203 @@
+"""Closed-loop serving benchmark (paper §7 workload management).
+
+N clients drive the serving front door (engine/serving.py) in a closed
+loop -- each client submits its next query only after its previous one
+completed -- so the latency a ticket observes includes real queue wait.
+The same per-client schedules then run serially, one query at a time
+through the ordinary pipeline, as the baseline the shared-scan path must
+beat: a coalesced group assembles its (cache-resident) scan once where
+serial execution assembles it once PER QUERY.
+
+Reports p50/p95/p99 latency, throughput, shared-scan hit rate, and the
+speedup over serial; benchmarks/run.py writes the result to repo-root
+BENCH_serving.json so tail latency is tracked PR-over-PR
+(scripts/verify.sh gates on regressions).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (ColumnDef, QueryRejectedError, SQLType,  # noqa: E402
+                        TableSchema, VerticaDB)
+from repro.engine import col, execute  # noqa: E402
+
+N_FACT = 400_000
+N_WAVES = 12           # ROS containers per store: real scan-assembly work
+N_CLIENTS = 12
+OPS_PER_CLIENT = 12
+QUICK_N_FACT = 60_000
+QUICK_N_WAVES = 6
+QUICK_N_CLIENTS = 6
+QUICK_OPS = 6
+N_CIDS = 64
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+
+
+def _build_db(n_fact: int, waves: int) -> VerticaDB:
+    rng = np.random.default_rng(0)
+    db = VerticaDB(n_nodes=4, k_safety=1, block_rows=512)
+    db.create_table(
+        TableSchema("sales", (ColumnDef("sale_id"), ColumnDef("cid"),
+                              ColumnDef("day"), ColumnDef("qty"),
+                              ColumnDef("price", SQLType.FLOAT))),
+        sort_order=("day",), segment_by=("sale_id",))
+    per = n_fact // waves
+    for w in range(waves):
+        t = db.begin()
+        db.insert(t, "sales", {
+            "sale_id": np.arange(w * per, (w + 1) * per),
+            "cid": rng.integers(0, N_CIDS, per),
+            "day": np.sort(rng.integers(0, 365, per)),
+            "qty": rng.integers(1, 10, per),
+            "price": rng.integers(40, 4000, per).astype(np.float64) / 4})
+        db.commit(t)
+        # moveout only: keep one container per wave so the scan has many
+        # containers to assemble (the cost coalescing amortizes)
+        db.run_tuple_mover(force_moveout=True, do_mergeout=False)
+    return db
+
+
+def _mix(db) -> List:
+    """The query mix: single-table aggregate shapes that coalesce.
+    Predicates avoid the sort leader so SMA pruning doesn't hand the
+    serial baseline a different (smaller) scan than the shared one."""
+    q = db.query
+    return [
+        q("sales").group_by("cid").agg(n=("*", "count")).to_ir(),
+        q("sales").group_by("cid").agg(rev=("price", "sum")).to_ir(),
+        q("sales").where(col("qty") > 5).group_by("cid")
+        .agg(s=("price", "sum"), n=("*", "count")).to_ir(),
+        q("sales").where(col("cid") < N_CIDS // 2).group_by("qty")
+        .agg(avg_p=("price", "avg")).to_ir(),
+        q("sales").agg(total=("price", "sum"), n=("*", "count")).to_ir(),
+        q("sales").where(col("qty") == 3).agg(n=("*", "count")).to_ir(),
+        q("sales").group_by("qty").agg(mx=("price", "max"),
+                                       mn=("price", "min")).to_ir(),
+        q("sales").select(margin=col("price") * col("qty"))
+        .group_by("cid").agg(m=("margin", "sum")).order_by("-m")
+        .limit(10).to_ir(),
+    ]
+
+
+def _percentiles(lat_ms: List[float]):
+    a = np.asarray(sorted(lat_ms))
+    return (float(np.percentile(a, 50)), float(np.percentile(a, 95)),
+            float(np.percentile(a, 99)))
+
+
+def run(report):
+    quick = _quick()
+    n_fact = QUICK_N_FACT if quick else N_FACT
+    waves = QUICK_N_WAVES if quick else N_WAVES
+    n_clients = QUICK_N_CLIENTS if quick else N_CLIENTS
+    ops = QUICK_OPS if quick else OPS_PER_CLIENT
+
+    db = _build_db(n_fact, waves)
+    mix = _mix(db)
+    rng = np.random.default_rng(42)
+    scripts = [[mix[i] for i in rng.integers(0, len(mix), ops)]
+               for _ in range(n_clients)]
+
+    # warm both paths outside the timed windows: plan-cache + block-cache
+    # entries for the dedicated programs (serial) and shared programs
+    for q in mix:
+        execute(db, q)
+    warm = db.serve(queue_depth=len(mix) + 1, max_coalesce=len(mix))
+    for q in mix:
+        warm.submit(q)
+    warm.drain()
+
+    # --- serial baseline: the same ops one at a time ---
+    t0 = time.time()
+    serial_lat = []
+    for rnd in range(ops):
+        for ci in range(n_clients):
+            t1 = time.time()
+            execute(db, scripts[ci][rnd])
+            serial_lat.append((time.time() - t1) * 1000)
+    serial_s = time.time() - t0
+
+    # --- closed-loop serving run ---
+    svc = db.serve(queue_depth=n_clients + 2, max_concurrent=4,
+                   max_coalesce=8, batch_boost_after=4)
+    sessions = [svc.session("interactive" if ci % 3 else "batch")
+                for ci in range(n_clients)]
+    next_op = [0] * n_clients
+    inflight = {}
+    lat_ms: List[float] = []
+    waits: List[float] = []
+    rejected = 0
+    t0 = time.time()
+    while True:
+        for ci, sess in enumerate(sessions):
+            if ci in inflight or next_op[ci] >= ops:
+                continue
+            try:
+                inflight[ci] = sess.submit(scripts[ci][next_op[ci]])
+            except QueryRejectedError:
+                rejected += 1
+            next_op[ci] += 1
+        if not inflight:
+            if all(n >= ops for n in next_op):
+                break
+            continue
+        svc.step()
+        for ci in [c for c, t in inflight.items() if t.done]:
+            t = inflight.pop(ci)
+            if t.state == "done":
+                lat_ms.append(t.stats.total_s * 1000)
+                waits.append(t.stats.queue_wait_s * 1000)
+    serving_s = time.time() - t0
+
+    p50, p95, p99 = _percentiles(lat_ms)
+    sp50, sp95, sp99 = _percentiles(serial_lat)
+    n_ok = len(lat_ms)
+    result = {
+        "quick": quick,
+        "n_fact": n_fact,
+        "ros_containers_per_store": waves,
+        "clients": n_clients,
+        "ops_total": n_clients * ops,
+        "completed": n_ok,
+        "rejected": rejected,
+        "p50_ms": round(p50, 3),
+        "p95_ms": round(p95, 3),
+        "p99_ms": round(p99, 3),
+        "serial_p50_ms": round(sp50, 3),
+        "serial_p99_ms": round(sp99, 3),
+        "mean_queue_wait_ms": round(float(np.mean(waits)), 3) if waits
+        else 0.0,
+        "throughput_qps": round(n_ok / serving_s, 2),
+        "serial_qps": round(len(serial_lat) / serial_s, 2),
+        "speedup_vs_serial": round(serial_s / serving_s, 3),
+        "shared_scan_hit_rate": round(svc.stats.shared_hit_rate(), 3),
+        "shared_scans": svc.stats.shared_scans,
+        "coalesced_max": svc.stats.coalesced_max,
+        "batch_boosts": svc.stats.batch_boosts,
+        "peak_reserved_mb": round(
+            db.block_cache.stats.peak_reserved_bytes / 2**20, 1),
+    }
+    print(f"[serving] {n_ok}/{n_clients * ops} ops, {n_clients} clients | "
+          f"p50 {p50:.1f}ms p95 {p95:.1f}ms p99 {p99:.1f}ms | "
+          f"{result['throughput_qps']} qps vs serial "
+          f"{result['serial_qps']} qps "
+          f"(speedup {result['speedup_vs_serial']}x) | "
+          f"shared-scan hit rate {result['shared_scan_hit_rate']:.0%} "
+          f"(max group {svc.stats.coalesced_max})")
+    assert svc.stats.shared_hit_rate() > 0, "no query rode a shared scan"
+    assert db.epochs.n_pinned() == 0, "serving leaked an epoch pin"
+    report("serving/closed_loop", result)
+
+
+if __name__ == "__main__":
+    run(lambda k, v: None)

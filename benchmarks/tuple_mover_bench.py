@@ -1,6 +1,12 @@
 """Tuple mover behaviour under sustained ingest (paper §4): container-count
 stability (no explosion), bounded re-merges, ingest rate, and compression
-improving as containers merge into larger sorted runs."""
+improving as containers merge into larger sorted runs.
+
+Also measures epoch-history compaction (paper §5.1): the AHM trails every
+commit by construction, a pinned query snapshot stalls it (history a live
+snapshot reads cannot be purged), and it catches back up to the commit
+frontier once the pin is released. The pin window here models a
+long-running report holding a snapshot mid-ingest."""
 from __future__ import annotations
 
 import math
@@ -25,10 +31,17 @@ def run(report):
 
     waves = 24
     rows_per_wave = 25_000
+    pin_wave, unpin_wave = 8, 16
+    pinned_epoch = None
     t0 = time.time()
     timeline = []
     total_merges = 0
     for w in range(waves):
+        if w == pin_wave:
+            pinned_epoch = db.epochs.pin()
+            ahm_at_pin = db.epochs.ahm
+        if w == unpin_wave:
+            db.epochs.unpin(pinned_epoch)
         t = db.begin()
         db.insert(t, "events", {
             "ts": np.sort(rng.integers(w * 10**6, (w + 1) * 10**6,
@@ -41,12 +54,17 @@ def run(report):
         rep = db.storage_report()["events_super"]
         timeline.append({"wave": w, "containers": rep["containers"],
                          "ratio": round(rep["ratio"], 2),
-                         "mergeouts": stats["mergeouts"]})
+                         "mergeouts": stats["mergeouts"],
+                         "ahm": db.epochs.ahm,
+                         "epoch_span": db.epochs.latest_queryable()
+                         - db.epochs.ahm})
     dt = time.time() - t0
     n_total = waves * rows_per_wave
     max_containers = max(t_["containers"] for t_ in timeline)
     # bound: merges per tuple is O(log waves)
     merge_bound = waves * math.ceil(math.log2(waves) + 1)
+    pinned_window = timeline[pin_wave:unpin_wave]
+    max_span_pinned = max(t_["epoch_span"] for t_ in pinned_window)
     result = {
         "rows_ingested": n_total,
         "ingest_rows_per_s": n_total / dt,
@@ -55,14 +73,26 @@ def run(report):
         "total_mergeouts": total_merges,
         "merge_bound": merge_bound,
         "final_compression": timeline[-1]["ratio"],
+        "pinned_epoch": pinned_epoch,
+        "max_epoch_span_pinned": max_span_pinned,
+        "ahm_final": timeline[-1]["ahm"],
+        "epoch_span_final": timeline[-1]["epoch_span"],
         "timeline": timeline[::4],
     }
     print(f"[tuple_mover] {n_total:,} rows at "
           f"{n_total/dt:,.0f} rows/s; containers max {max_containers} "
           f"final {timeline[-1]['containers']}; mergeouts {total_merges} "
           f"(bound {merge_bound}); compression "
-          f"{timeline[-1]['ratio']:.2f}x")
+          f"{timeline[-1]['ratio']:.2f}x; AHM span while pinned "
+          f"{max_span_pinned}, final {timeline[-1]['epoch_span']}")
     assert total_merges <= merge_bound
+    # the pinned snapshot stalls the AHM at its pin-time value for the
+    # whole window (8 waves of ingest advance the commit frontier but
+    # none of that history may be purged)...
+    assert all(t_["ahm"] == ahm_at_pin for t_ in pinned_window)
+    # ...and once unpinned the AHM catches back up past the pin point
+    assert timeline[-1]["ahm"] > pinned_epoch
+    assert timeline[-1]["epoch_span"] <= pinned_window[0]["epoch_span"]
     report("tuple_mover/ingest", result)
 
 

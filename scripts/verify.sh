@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Fast verification gate: tier-1 fast subset + docs tier + segmented
 # differential oracle + fixed-seed chaos tier + quick cstore benchmark
-# with a perf-regression check against the committed BENCH_cstore.json.
+# with a perf-regression check against the committed BENCH_cstore.json
+# + serving tier (tests + quick closed-loop benchmark gated against the
+# committed BENCH_serving.json).
 #
 # Usage: scripts/verify.sh            (from the repo root)
 #
@@ -34,7 +36,8 @@ timeout "$T_FAST" python -m pytest -q -x -p no:cacheprovider \
     tests/test_segmentation_props.py \
     tests/test_crash_replay_props.py \
     tests/test_locks.py \
-    tests/test_faults.py
+    tests/test_faults.py \
+    tests/test_serving.py
 
 echo "== docs tier: README/DESIGN snippets must run green =="
 timeout "$T_DOCS" python scripts/check_docs.py
@@ -93,5 +96,48 @@ print(f"[verify] warm total vs previous: {ratio:.2f}x "
 if ratio > tol:
     sys.exit(f"[verify] PERF REGRESSION: warm total {ratio:.2f}x slower "
              f"than previous run (> {tol:.2f}x)")
+EOF
+
+echo "== quick serving benchmark =="
+PREV_SRV=""
+if [ -f BENCH_serving.json ]; then
+    PREV_SRV=$(mktemp)
+    cp BENCH_serving.json "$PREV_SRV"
+fi
+timeout "$T_BENCH" python -m benchmarks.run --quick serving
+
+python - "$PREV_SRV" "$TOL" <<'EOF'
+import json
+import shutil
+import sys
+
+prev_path, tol = sys.argv[1], float(sys.argv[2])
+cur = json.load(open("BENCH_serving.json"))
+# the serving tier's hard requirements: tail latency reported, and the
+# shared-scan path actually coalescing (a hit rate of 0 means every
+# query ran solo -- the subsystem's point is gone)
+assert cur.get("p99_ms"), "serving bench missing p99 latency"
+assert cur.get("shared_scan_hit_rate", 0) > 0, \
+    "serving bench: shared-scan hit rate is 0"
+print(f"[verify] serving p50 {cur['p50_ms']:.1f}ms "
+      f"p99 {cur['p99_ms']:.1f}ms, {cur['throughput_qps']} qps, "
+      f"shared-scan hit rate {cur['shared_scan_hit_rate']:.0%}, "
+      f"speedup vs serial {cur['speedup_vs_serial']:.2f}x")
+if not prev_path:
+    print("[verify] no previous BENCH_serving.json; quick baseline kept")
+    sys.exit(0)
+prev = json.load(open(prev_path))
+shutil.copy(prev_path, "BENCH_serving.json")
+if not (prev.get("quick") and cur.get("quick")
+        and prev.get("n_fact") == cur.get("n_fact")):
+    print("[verify] previous serving bench not comparable (size/mode); "
+          "skipping regression check")
+    sys.exit(0)
+ratio = prev["throughput_qps"] / max(cur["throughput_qps"], 1e-9)
+print(f"[verify] serving throughput vs previous: {ratio:.2f}x slower "
+      f"(tolerance {tol:.2f}x)")
+if ratio > tol:
+    sys.exit(f"[verify] PERF REGRESSION: serving throughput {ratio:.2f}x "
+             f"below previous run (> {tol:.2f}x)")
 EOF
 echo "== verify OK =="

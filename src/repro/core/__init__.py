@@ -10,9 +10,10 @@ from .database import (AvailabilityError, NodeState, QueryRejectedError,
 from .encodings import (EncodedColumn, Encoding, decode_jnp, device_bytes,
                         encode, upload_jnp)
 from .epochs import EpochManager
-from .faults import (CrashNode, FaultError, FaultInjector, FaultTimeout,
-                     Hang, NodeCrashError, NullInjector, Transient,
-                     TransientFaultError, fire_with_retries, with_retries)
+from .faults import (INJECTION_POINTS, CrashNode, FaultError,
+                     FaultInjector, FaultTimeout, Hang, NodeCrashError,
+                     NullInjector, Transient, TransientFaultError,
+                     fire_with_retries, with_retries)
 from .locks import COMPATIBLE, CONVERT, MODES, LockError, LockManager
 from .partitioning import partition_keys
 from .projection import (PrejoinSpec, ProjectionDef, super_projection)
@@ -27,6 +28,7 @@ __all__ = [
     "CONVERT", "CacheStats", "Catalog",
     "ColumnDef", "ColumnSMA", "CrashNode", "DeleteVector", "EncodedColumn",
     "Encoding", "EpochManager", "FaultError", "FaultInjector",
+    "INJECTION_POINTS",
     "FaultTimeout", "Hang", "LockError", "LockManager", "MODES",
     "NodeCrashError", "NodeState", "NullInjector", "PrejoinSpec",
     "ProjectionDef", "ProjectionStore", "QueryRejectedError",

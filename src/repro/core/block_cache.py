@@ -53,6 +53,9 @@ class CacheStats:
     evictions: int = 0
     invalidations: int = 0
     bytes_in_use: int = 0
+    # admission-control working-set reservations (engine/serving.py)
+    reserved_bytes: int = 0
+    peak_reserved_bytes: int = 0
 
     def hit_rate(self) -> float:
         n = self.hits + self.misses
@@ -126,6 +129,31 @@ class BlockCache:
                 keys.discard(key)
                 if not keys:
                     del self._by_container[key[0]]
+
+    # ----------------------------------------- working-set reservations --
+    # Admission control (engine/serving.py) charges each dispatched query
+    # mix's estimated decoded working set here before executing it.
+    # Reservations never insert or evict entries -- the LRU handles actual
+    # residency -- they bound how much NEW working set concurrently
+    # admitted queries may open at once against the same byte budget the
+    # LRU answers to, which is the paper's "resource manager sizes
+    # concurrent query budgets against physical memory" (§7).
+
+    def reserve(self, nbytes: int) -> int:
+        self.stats.reserved_bytes += int(nbytes)
+        self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
+                                             self.stats.reserved_bytes)
+        return self.stats.reserved_bytes
+
+    def release(self, nbytes: int) -> int:
+        self.stats.reserved_bytes = max(0,
+                                        self.stats.reserved_bytes
+                                        - int(nbytes))
+        return self.stats.reserved_bytes
+
+    def headroom(self) -> int:
+        """Budget bytes not yet claimed by a live reservation."""
+        return max(0, self.budget_bytes - self.stats.reserved_bytes)
 
     # ----------------------------------------------------- invalidation --
 

@@ -244,6 +244,24 @@ class VerticaDB:
         from ..engine.builder import QueryBuilder
         return QueryBuilder(self, table)
 
+    def serve(self, **kw):
+        """Multi-tenant serving front door (engine/serving.py; paper §7
+        workload management): admission control with interactive/batch
+        priority queues, a bounded session pool, a concurrent-working-set
+        memory budget charged against the block cache, and shared scans
+        that coalesce queued queries over one projection + snapshot epoch
+        into a single cache-resident scan.
+
+            svc = db.serve(queue_depth=16)
+            with svc.session("interactive") as s:
+                t = s.submit(db.query("sales").group_by("cid")
+                             .agg(n=("*", "count")))
+            svc.drain()
+            rows = t.result()
+        """
+        from ..engine.serving import QueryService
+        return QueryService(self, **kw)
+
     # ------------------------------------------------------------- txn --
 
     def begin(self, *, direct_to_ros: bool = False) -> Txn:

@@ -61,6 +61,13 @@ class EpochManager:
     def oldest_pinned(self) -> Optional[int]:
         return min(self.pins) if self.pins else None
 
+    def n_pinned(self) -> int:
+        """Total live snapshot pins across all epochs.  Zero means nothing
+        is holding the AHM back -- the serving layer's pin-lifecycle
+        invariant (every admitted/rejected/timed-out query released its
+        pin) is asserted against this."""
+        return int(sum(self.pins.values()))
+
     @contextlib.contextmanager
     def snapshot(self, epoch: Optional[int] = None) -> Iterator[int]:
         """``with epochs.snapshot() as e:`` -- a pinned consistent read."""

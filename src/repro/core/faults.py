@@ -5,7 +5,8 @@ good as the failure timings it survives.  This module lets tests (and the
 chaos tier in scripts/verify.sh) splice failures into *named injection
 points* threaded through the stack -- commit apply, tuple-mover passes,
 recovery replay, buddy reads, per-shard slab builds, exchange
-collectives -- with programmable schedules:
+collectives, serving admission and shared scans (the canonical list is
+:data:`INJECTION_POINTS`) -- with programmable schedules:
 
     inj = db.enable_faults(seed=7)
     inj.on("exchange.resegment", CrashNode(node=2), hit=3)
@@ -44,6 +45,28 @@ from contextlib import contextmanager
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+# every named injection point threaded through the stack, the canonical
+# registry for docs and chaos sweeps (tests iterate this so a new point
+# cannot be forgotten by the chaos tier).  The serving.* points land in
+# engine/serving.py: ``serving.admit`` fires per admission decision
+# (before anything is pinned or queued), ``serving.shared_scan`` fires
+# once per coalesced scan dispatch (a crash there exercises multi-query
+# failover).
+INJECTION_POINTS = (
+    "commit.apply",
+    "tuple_mover.moveout",
+    "tuple_mover.mergeout",
+    "recovery.replay",
+    "recovery.buddy_read",
+    "segmented.slab_build",
+    "segmented.buddy_read",
+    "exchange.resegment",
+    "exchange.broadcast",
+    "serving.admit",
+    "serving.shared_scan",
+)
 
 
 class FaultError(Exception):

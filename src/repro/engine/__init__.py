@@ -5,9 +5,12 @@ from .logical import (Aggregate, Filter, Join, Limit, LogicalJoin,
                       LogicalQuery, Project, Scan, Sort, as_ir, lower)
 from .pipeline import ExecStats, JoinSpec, Query, execute
 from .segmented import execute_segmented
+from .serving import (QueryService, ServiceStats, ServingStats, Session,
+                      Ticket)
 
 __all__ = ["Aggregate", "Col", "ExecStats", "Expr", "Filter", "Join",
            "JoinSpec", "Limit", "Lit", "LogicalJoin", "LogicalQuery",
            "PLAN_CACHE", "PlanCache", "Project", "Query", "QueryBuilder",
-           "Scan", "Sort", "as_ir", "col", "execute", "execute_segmented",
-           "lit", "lower"]
+           "QueryService", "Scan", "ServiceStats", "ServingStats",
+           "Session", "Sort", "Ticket", "as_ir", "col", "execute",
+           "execute_segmented", "lit", "lower"]

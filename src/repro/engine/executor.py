@@ -396,22 +396,20 @@ def _stores_have_wos(db: VerticaDB, plan) -> bool:
                for host, owner in plan.sources)
 
 
-def execute_fused(db: VerticaDB, q, plan, as_of: int,
-                  stats) -> Optional[Dict[str, np.ndarray]]:
-    """Run an aggregate query as one cached fused program.  Returns None
-    when the query shape is outside the fused subset (WOS rows pending,
-    no aggregation, or composite keys without static SMA domains) -- the
-    caller falls back to the general pipeline."""
+def fused_plan_params(q, plan, stats=None
+                      ) -> Optional[Tuple[str, int, Tuple[int, ...]]]:
+    """Static groupby algorithm + domain selection for a jit-compiled
+    program: dense/packing need per-key domains from container SMAs;
+    unknown/oversized falls to sort for one key and to the cold path
+    (runtime bounds) for composite keys.  Returns ``(algo, domain,
+    domains)`` or None when the shape is outside the fused subset.
+    Factored out so the dedicated fused path and the serving shared-scan
+    path (engine/serving.py) make IDENTICAL choices -- the differential
+    byte-identity guarantee leans on this."""
     if not (q.aggs or q.group_by):
         return None
     if any(j.how != "inner" for j in q.joins):
         return None   # left-join NULL groups need runtime key bounds
-    if _stores_have_wos(db, plan):
-        return None   # WOS rows need the unencoded side-scan
-
-    # groupby algorithm with STATIC domains (jit-friendly): dense/packing
-    # need per-key domains from container SMAs; unknown/oversized -> sort
-    # for one key, cold path (runtime bounds) for composite keys
     algo = plan.groupby_algorithm
     if algo == "rle":
         algo = "sort"
@@ -423,7 +421,8 @@ def execute_fused(db: VerticaDB, q, plan, as_of: int,
             if algo == "dense" and (dom is None
                                     or dom > plan.dense_domain_limit):
                 algo = "sort"
-                stats.groupby_algorithm = "sort (runtime switch)"
+                if stats is not None:
+                    stats.groupby_algorithm = "sort (runtime switch)"
             domains = (int(dom),) if dom is not None else (0,)
             domain = int(dom) if algo == "dense" else plan.max_groups
         else:
@@ -436,9 +435,67 @@ def execute_fused(db: VerticaDB, q, plan, as_of: int,
                 return None   # packed key would overflow device int32
             if algo == "dense" and total > plan.dense_domain_limit:
                 algo = "sort"
-                stats.groupby_algorithm = "sort (runtime switch)"
+                if stats is not None:
+                    stats.groupby_algorithm = "sort (runtime switch)"
             domains = tuple(int(d) for d in doms)
             domain = total if algo == "dense" else plan.max_groups
+    return algo, domain, domains
+
+
+def _shape_fused_result(q, res, algo: str, domain: int,
+                        domains: Tuple[int, ...], stats,
+                        sigs: Tuple[tuple, ...] = ()
+                        ) -> Optional[Dict[str, np.ndarray]]:
+    """Host-side shaping of a fused program's output (small results);
+    HAVING/ORDER/LIMIT are applied by pipeline._finalize, shared with the
+    cold path.  A sort-cap overflow negative-caches every signature in
+    ``sigs`` and returns None -- the caller falls back to the general
+    pipeline (which lands on the exact host GroupBy)."""
+    aggs = tuple(q.aggs)
+    if not q.group_by:
+        return {name: np.asarray(v)[:1] for name, v in res.items()}
+    if algo == "dense":
+        counts = np.asarray(res["group_count"])
+        sel = counts > 0
+        gkeys = np.flatnonzero(sel)
+        out = {"group_count": counts[sel]}
+        for name, _, _ in aggs:
+            out[name] = np.asarray(res[name])[sel]
+    else:
+        n = int(res["n_groups"])
+        if n > domain:
+            # distinct groups exceed the sort cap: results would be
+            # silently merged -- fall back to the general pipeline
+            # (which lands on the host GroupBy) and remember the shape
+            if len(_SORT_OVERFLOWED) > 512:
+                _SORT_OVERFLOWED.clear()
+            _SORT_OVERFLOWED.update(sigs)
+            stats.plan_cache = ""
+            return None
+        gkeys = np.asarray(res["group_keys"])[:n]
+        out = {"group_count": np.asarray(res["group_count"])[:n]}
+        for name, _, _ in aggs:
+            out[name] = np.asarray(res[name])[:n]
+    if len(q.group_by) > 1:
+        for g, kv in zip(q.group_by, ops.unpack_keys(gkeys, domains)):
+            out[g] = kv
+    else:
+        out[q.group_by[0]] = gkeys
+    return out
+
+
+def execute_fused(db: VerticaDB, q, plan, as_of: int,
+                  stats) -> Optional[Dict[str, np.ndarray]]:
+    """Run an aggregate query as one cached fused program.  Returns None
+    when the query shape is outside the fused subset (WOS rows pending,
+    no aggregation, or composite keys without static SMA domains) -- the
+    caller falls back to the general pipeline."""
+    if _stores_have_wos(db, plan):
+        return None   # WOS rows need the unencoded side-scan
+    params = fused_plan_params(q, plan, stats)
+    if params is None:
+        return None
+    algo, domain, domains = params
 
     br = db.block_rows
     sig = _plan_signature(db, q, plan, algo, domain, domains, br)
@@ -469,37 +526,42 @@ def execute_fused(db: VerticaDB, q, plan, as_of: int,
                                   tuple(q.aggs)))
     stats.plan_cache = "hit" if hit else "miss"
     res = fused(scan.columns, scan.valid, tuple(builds))
+    return _shape_fused_result(q, res, algo, domain, domains, stats,
+                               sigs=(sig,))
 
-    # --- host-side result shaping (small outputs); HAVING/ORDER/LIMIT
-    # are applied by pipeline._finalize, shared with the cold path ---
-    aggs = tuple(q.aggs)
-    if not q.group_by:
-        return {name: np.asarray(v)[:1] for name, v in res.items()}
-    if algo == "dense":
-        counts = np.asarray(res["group_count"])
-        sel = counts > 0
-        gkeys = np.flatnonzero(sel)
-        out = {"group_count": counts[sel]}
-        for name, _, _ in aggs:
-            out[name] = np.asarray(res[name])[sel]
-    else:
-        n = int(res["n_groups"])
-        if n > domain:
-            # distinct groups exceed the sort cap: results would be
-            # silently merged -- fall back to the general pipeline
-            # (which lands on the host GroupBy) and remember the shape
-            if len(_SORT_OVERFLOWED) > 512:
-                _SORT_OVERFLOWED.clear()
-            _SORT_OVERFLOWED.add(sig)
-            stats.plan_cache = ""
-            return None
-        gkeys = np.asarray(res["group_keys"])[:n]
-        out = {"group_count": np.asarray(res["group_count"])[:n]}
-        for name, _, _ in aggs:
-            out[name] = np.asarray(res[name])[:n]
-    if len(q.group_by) > 1:
-        for g, kv in zip(q.group_by, ops.unpack_keys(gkeys, domains)):
-            out[g] = kv
-    else:
-        out[q.group_by[0]] = gkeys
-    return out
+
+def execute_shared_fused(db: VerticaDB, q, plan, cols: Dict[str, jax.Array],
+                         valid: jax.Array, stats
+                         ) -> Optional[Dict[str, np.ndarray]]:
+    """Per-query mask->aggregate stage of a serving shared scan
+    (engine/serving.py): the coalesced batch's ONE unpruned scan is
+    already device-resident; this runs the query's own predicate +
+    groupby over it as a plan-cached jitted program.  The predicate is
+    evaluated INSIDE the program -- a shared scan cannot push any single
+    query's predicate down -- so the cache key carries a ``"shared"``
+    prefix to keep these programs distinct from the dedicated fused path
+    (same exec signature, different predicate placement).  Algorithm and
+    domain choices come from the same ``fused_plan_params`` the dedicated
+    path uses, which is what makes results byte-identical.  Returns None
+    outside the fused subset or on sort-cap overflow -- the caller falls
+    back to the general (untraced) operators, exactly as pipeline does."""
+    if q.joins:
+        return None   # shared scans coalesce single-table queries only
+    params = fused_plan_params(q, plan, stats)
+    if params is None:
+        return None
+    algo, domain, domains = params
+    base_sig = _plan_signature(db, q, plan, algo, domain, domains,
+                               db.block_rows)
+    sig = ("shared",) + base_sig[1:]
+    if sig in _SORT_OVERFLOWED or base_sig in _SORT_OVERFLOWED:
+        return None   # known to exceed the sort cap: don't re-try
+    fused, hit = PLAN_CACHE.get_or_build(
+        sig, lambda: _build_fused(q, q.predicate, algo, domains, domain,
+                                  tuple(q.aggs)))
+    stats.plan_cache = "hit" if hit else "miss"
+    res = fused(cols, valid, ())
+    # overflow poisons BOTH signatures: the dedicated path would overflow
+    # on the same data, so a later solo dispatch shouldn't re-try either
+    return _shape_fused_result(q, res, algo, domain, domains, stats,
+                               sigs=(sig, base_sig))

@@ -272,19 +272,8 @@ def _execute_attempt(db: VerticaDB, q: LogicalQuery, plan, as_of: int,
                                              scan_pred, sip, as_of, stats)
         if ros is not None:
             scans.append(ros)
-        for host, owner in plan.sources:
-            store = db.nodes[host].stores[owner]
-            # WOS rows participate too (unencoded scan)
-            wos = fused_exec.wos_visible(store, as_of)
-            if wos is not None:
-                data, vis = wos
-                cols = {c: jnp.asarray(data[c]) for c in need}
-                valid = jnp.asarray(vis)
-                if scan_pred is not None:
-                    valid = valid & jnp.asarray(scan_pred(cols), bool)
-                if sip is not None:
-                    valid = valid & sip(cols)
-                scans.append(ops.ScanResult(cols, valid))
+        scans.extend(wos_scan_results(db, plan, need, scan_pred, sip,
+                                      as_of))
         merged = ops.concat_scans(scans)
         if merged is None:
             return _finish(_empty_result(q))
@@ -318,6 +307,29 @@ def _execute_attempt(db: VerticaDB, q: LogicalQuery, plan, as_of: int,
         # ``execute`` (one pin covers every failover attempt, so the
         # retried query replans at the identical snapshot)
         pass
+
+
+def wos_scan_results(db: VerticaDB, plan, need, scan_pred, sip,
+                     as_of: int) -> List[ops.ScanResult]:
+    """Unencoded side-scans of every pending WOS behind ``plan.sources``
+    (rows the tuple mover hasn't drained yet participate in queries
+    immediately).  Shared by the single-query pipeline and the serving
+    shared-scan path (engine/serving.py) so trickle-loaded rows are
+    byte-identically visible to both."""
+    scans: List[ops.ScanResult] = []
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        wos = fused_exec.wos_visible(store, as_of)
+        if wos is not None:
+            data, vis = wos
+            cols = {c: jnp.asarray(data[c]) for c in need}
+            valid = jnp.asarray(vis)
+            if scan_pred is not None:
+                valid = valid & jnp.asarray(scan_pred(cols), bool)
+            if sip is not None:
+                valid = valid & sip(cols)
+            scans.append(ops.ScanResult(cols, valid))
+    return scans
 
 
 # ---------------------------------------------------------------------------

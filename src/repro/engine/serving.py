@@ -1,0 +1,717 @@
+"""Concurrent query serving: admission control, priority queues, shared
+scans (paper §7 "workload management").
+
+Everything below this module executes ONE query at a time; Vertica
+presents a classical relational interface at web scale by putting a
+workload-management layer in front of that engine.  This is that layer:
+a bounded, prioritized, memory-budgeted front door that turns the
+single-query executor into a multi-tenant service.
+
+Three mechanisms (DESIGN.md §16):
+
+* **Admission control** -- a bounded session pool and two priority
+  queues (``interactive`` served ahead of ``batch``, with an
+  anti-starvation boost so a saturating interactive stream cannot starve
+  batch forever).  Queue-depth caps and queued-past-timeout expiry
+  reject with the typed ``QueryRejectedError`` -- the same
+  refusal-over-wrong-answer contract the failover path uses.  Every
+  admission decision fires the ``serving.admit`` injection point, so
+  chaos schedules cover the front door too.
+* **Shared scans** -- queued queries over the same projection whose
+  pinned snapshots clamp to the same effective epoch coalesce into ONE
+  cache-resident scan (no SMA pruning, no predicate pushdown: the scan
+  is shared), with each member applying its own predicate mask +
+  aggregation as a plan-cached jitted program
+  (executor.execute_shared_fused).  The plan cache is thereby exploited
+  *across* concurrent queries, not only across repeats of one query; a
+  coalesced group charges the memory budget once.  A differential test
+  (tests/test_serving.py) proves coalesced results byte-identical to
+  independent execution -- see ``_shared_once`` for why that holds.
+* **Memory budget** -- each dispatch reserves its estimated decoded
+  working set against the block-cache budget (BlockCache.reserve);
+  admission stops opening new work when the reservation pool is
+  exhausted, bounding the concurrent working set to what HBM holds.
+
+Concurrency model: cooperative and deterministic, like the rest of the
+simulated cluster.  ``submit()`` pins the query's snapshot epoch and
+enqueues; ``step()`` runs one admission round (expire timed-out tickets
+-> admit up to ``max_concurrent`` dispatch units under the memory
+budget -> execute them); ``drain()`` steps until idle.  The latency a
+ticket observes therefore includes real queue wait, which is what
+benchmarks/serving.py reports as p50/p95/p99.
+
+The load-bearing invariant is the epoch-pin lifecycle: a pin taken at
+submit is released on EXACTLY ONE of completion / timeout / fault
+rejection (queue-full rejection happens before pinning), so no rejected
+or abandoned query can stall the AHM.  tests/test_serving.py floods the
+queue and asserts ``EpochManager.n_pinned() == 0`` afterward.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.database import AvailabilityError, QueryRejectedError, VerticaDB
+from ..core.faults import (NodeCrashError, TransientFaultError,
+                           fire_with_retries)
+from .logical import as_ir
+from . import executor as fused_exec
+from . import operators as ops
+from .pipeline import (ExecStats, _empty_result, _finalize, _run_groupby,
+                       execute, wos_scan_results)
+
+PRIORITIES = ("interactive", "batch")
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Per-query serving telemetry, one per Ticket (the serving-layer
+    analog of pipeline.ExecStats, which rides along in ``exec_stats``)."""
+    priority: str = "interactive"
+    admitted: bool = False
+    rejected_reason: str = ""       # "queue_full"/"timeout"/"admission"/
+    #                                 "unavailable" ("" = not rejected)
+    queue_wait_s: float = 0.0       # submit -> dispatch
+    exec_s: float = 0.0             # dispatch -> result
+    total_s: float = 0.0            # submit -> done (closed-loop latency)
+    shared_scan: str = ""           # "leader"/"member" when coalesced
+    share_group: int = 1            # tickets in this dispatch unit
+    dispatch_seq: int = -1          # global dispatch order (priority tests)
+    snapshot_epoch: int = 0         # the pinned epoch this query read
+    reserved_bytes: int = 0         # working set charged at admission
+    oversized: bool = False         # working set alone exceeds the budget
+    failovers: int = 0              # mid-dispatch node crashes absorbed
+    exec_stats: Optional[ExecStats] = None
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Service-wide counters (benchmarks/serving.py reads these)."""
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    rejected_queue_full: int = 0
+    rejected_timeout: int = 0
+    rejected_admission: int = 0
+    rejected_unavailable: int = 0
+    dispatches: int = 0             # dispatch units executed
+    shared_scans: int = 0           # units that coalesced >= 2 queries
+    shared_hits: int = 0            # completed queries served coalesced
+    coalesced_max: int = 0
+    batch_boosts: int = 0           # anti-starvation picks of batch
+
+    def shared_hit_rate(self) -> float:
+        return self.shared_hits / self.completed if self.completed else 0.0
+
+
+class Ticket:
+    """A submitted query's handle: state machine
+    ``queued -> running -> done|rejected``, its pinned snapshot epoch,
+    and its ServingStats.  ``result()`` cooperatively drives the service
+    until this ticket settles."""
+
+    def __init__(self, service: "QueryService", q, priority: str,
+                 timeout_s: Optional[float], seq: int):
+        self.service = service
+        self.q = q
+        self.priority = priority
+        self.timeout_s = timeout_s
+        self.id = seq
+        self.submitted_at = time.time()
+        self.pinned: Optional[int] = None
+        self.state = "queued"
+        self.stats = ServingStats(priority=priority)
+        self._result: Optional[Dict[str, np.ndarray]] = None
+        self._error: Optional[Exception] = None
+        # dispatch-time physical choices (set at admission)
+        self.plan = None
+        self.scan_need: Tuple[str, ...] = ()
+
+    @property
+    def done(self) -> bool:
+        return self.state in ("done", "rejected")
+
+    @property
+    def error(self) -> Optional[Exception]:
+        return self._error
+
+    def result(self) -> Dict[str, np.ndarray]:
+        """Block (cooperatively) until this query settles; returns its
+        rows or raises its typed rejection error."""
+        guard = 0
+        while not self.done:
+            self.service.step()
+            guard += 1
+            if guard > 1_000_000:   # pragma: no cover - defensive
+                raise RuntimeError("serving made no progress")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class Session:
+    """One client's bounded handle on the service (the session pool is
+    the paper's connection limit): carries a default priority/timeout,
+    counts against ``max_sessions`` until closed."""
+
+    def __init__(self, service: "QueryService", priority: str,
+                 timeout_s: Optional[float] = None):
+        self.service = service
+        self.priority = priority
+        self.timeout_s = timeout_s
+        self.closed = False
+
+    def submit(self, q, *, priority: Optional[str] = None,
+               timeout_s: Optional[float] = None) -> Ticket:
+        if self.closed:
+            raise QueryRejectedError("session is closed")
+        return self.service.submit(
+            q, priority=priority or self.priority,
+            timeout_s=timeout_s if timeout_s is not None else self.timeout_s)
+
+    def close(self) -> None:
+        if not self.closed:
+            self.closed = True
+            self.service._sessions.discard(self)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+@dataclasses.dataclass
+class _Unit:
+    """One dispatch unit: a single query or a coalesced shared-scan
+    group, with its plan, effective snapshot epoch and reservation."""
+    tickets: List[Ticket]
+    plan: object
+    epoch: int
+    reserved: int
+    oversized: bool
+
+
+class QueryService:
+    """The serving front door (module docstring has the full design).
+
+    Construct via ``db.serve(...)``.  Knobs:
+
+    * ``max_concurrent`` -- dispatch units admitted per step (the
+      concurrency the memory budget is sized against).
+    * ``queue_depth`` -- per-priority-class cap; beyond it ``submit``
+      rejects typed *before* pinning anything.
+    * ``max_sessions`` -- session-pool bound.
+    * ``max_coalesce`` -- shared-scan group size cap (1 disables
+      coalescing entirely).
+    * ``memory_budget_bytes`` -- concurrent-working-set bound, default
+      the block cache's byte budget (reservations and cached blocks
+      answer to the same HBM).
+    * ``batch_boost_after`` -- after N consecutive interactive picks
+      with batch waiting, pick batch once (anti-starvation).
+    * ``default_timeout_s`` -- queued-past-this => typed rejection
+      (per-submit override available).
+    """
+
+    def __init__(self, db: VerticaDB, *, max_concurrent: int = 4,
+                 queue_depth: int = 32, max_sessions: int = 64,
+                 max_coalesce: int = 8,
+                 memory_budget_bytes: Optional[int] = None,
+                 batch_boost_after: int = 4,
+                 default_timeout_s: Optional[float] = None):
+        self.db = db
+        self.max_concurrent = int(max_concurrent)
+        self.queue_depth = int(queue_depth)
+        self.max_sessions = int(max_sessions)
+        self.max_coalesce = int(max_coalesce)
+        self.memory_budget_bytes = int(
+            memory_budget_bytes if memory_budget_bytes is not None
+            else db.block_cache.budget_bytes)
+        self.batch_boost_after = int(batch_boost_after)
+        self.default_timeout_s = default_timeout_s
+        self.stats = ServiceStats()
+        self._queues: Dict[str, deque] = {p: deque() for p in PRIORITIES}
+        self._sessions: set = set()
+        self._consec_interactive = 0
+        self._seq = itertools.count(1)
+        self._dispatch_seq = itertools.count(0)
+
+    # -------------------------------------------------------- front door --
+
+    def session(self, priority: str = "interactive", *,
+                timeout_s: Optional[float] = None) -> Session:
+        if priority not in PRIORITIES:
+            raise ValueError(f"unknown priority {priority!r}")
+        if len(self._sessions) >= self.max_sessions:
+            raise QueryRejectedError(
+                f"session pool exhausted ({self.max_sessions} active)")
+        s = Session(self, priority, timeout_s)
+        self._sessions.add(s)
+        return s
+
+    def submit(self, q, *, priority: str = "interactive",
+               timeout_s: Optional[float] = None) -> Ticket:
+        """Admit a query: fire the admission injection point, enforce the
+        queue-depth cap, then pin its snapshot epoch and enqueue.  Order
+        matters -- every rejection here happens BEFORE the pin, so a
+        refused query cannot stall the AHM."""
+        if priority not in PRIORITIES:
+            raise ValueError(f"unknown priority {priority!r}")
+        q = as_ir(q)
+        self.stats.submitted += 1
+        try:
+            fire_with_retries(self.db, "serving.admit", priority=priority)
+        except NodeCrashError:
+            pass   # a node died during admission; dispatch replans around it
+        except TransientFaultError as e:
+            self.stats.rejected += 1
+            self.stats.rejected_admission += 1
+            raise QueryRejectedError(f"admission failed: {e}") from e
+        queue = self._queues[priority]
+        if len(queue) >= self.queue_depth:
+            self.stats.rejected += 1
+            self.stats.rejected_queue_full += 1
+            raise QueryRejectedError(
+                f"{priority} queue full ({self.queue_depth} deep)",
+                epoch=self.db.epochs.latest_queryable())
+        t = Ticket(self, q, priority,
+                   timeout_s if timeout_s is not None
+                   else self.default_timeout_s, next(self._seq))
+        # pin at SUBMISSION: trickle commits while this query waits in
+        # the queue can never shift what it sees (§5 snapshot isolation)
+        t.pinned = self.db.epochs.pin()
+        t.stats.snapshot_epoch = t.pinned
+        queue.append(t)
+        return t
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def step(self) -> int:
+        """One admission round; returns how many tickets settled."""
+        settled0 = self.stats.completed + self.stats.rejected
+        self._expire_timeouts()
+        for unit in self._admit_round():
+            self._dispatch(unit)
+        return self.stats.completed + self.stats.rejected - settled0
+
+    def drain(self) -> "QueryService":
+        """Step until every queued ticket has settled."""
+        while self.pending():
+            if self.step() == 0:   # pragma: no cover - defensive
+                raise RuntimeError("serving stalled with queued tickets")
+        return self
+
+    # --------------------------------------------------- ticket lifecycle --
+
+    def _reject(self, t: Ticket, err: Exception, kind: str) -> None:
+        if t.pinned is not None:
+            self.db.epochs.unpin(t.pinned)
+            t.pinned = None
+        t.state = "rejected"
+        t._error = err
+        t.stats.rejected_reason = kind
+        t.stats.total_s = time.time() - t.submitted_at
+        self.stats.rejected += 1
+        if kind == "timeout":
+            self.stats.rejected_timeout += 1
+        elif kind == "unavailable":
+            self.stats.rejected_unavailable += 1
+
+    def _complete(self, t: Ticket, out, es: ExecStats) -> None:
+        self.db.epochs.unpin(t.pinned)
+        t.pinned = None
+        t.state = "done"
+        t._result = out
+        t.stats.admitted = True
+        t.stats.exec_stats = es
+        t.stats.total_s = time.time() - t.submitted_at
+        self.stats.completed += 1
+        if t.stats.shared_scan:
+            self.stats.shared_hits += 1
+
+    def _expire_timeouts(self) -> None:
+        now = time.time()
+        for pr in PRIORITIES:
+            queue = self._queues[pr]
+            keep: deque = deque()
+            while queue:
+                t = queue.popleft()
+                if t.timeout_s is not None and \
+                        now - t.submitted_at > t.timeout_s:
+                    self._reject(t, QueryRejectedError(
+                        f"queued past timeout ({t.timeout_s:.3f}s)",
+                        epoch=t.pinned), kind="timeout")
+                else:
+                    keep.append(t)
+            self._queues[pr] = keep
+
+    # -------------------------------------------------------- admission --
+
+    def _pick_queue(self) -> Optional[str]:
+        inter, batch = self._queues["interactive"], self._queues["batch"]
+        if inter and batch and \
+                self._consec_interactive >= self.batch_boost_after:
+            self.stats.batch_boosts += 1
+            return "batch"
+        if inter:
+            return "interactive"
+        if batch:
+            return "batch"
+        return None
+
+    def _plan(self, t: Ticket):
+        """Plan a ticket, converting planner refusals (lost redundancy,
+        no covering projection) into a typed per-ticket rejection rather
+        than letting them crash the admission round."""
+        from ..planner.planner import plan_query
+        try:
+            return plan_query(self.db, t.q)
+        except (AvailabilityError, ValueError) as e:
+            self._reject(t, e, kind="unavailable")
+            return None
+
+    def _effective_epoch(self, t: Ticket) -> int:
+        """The ticket's pin clamped to its table's epoch ceiling: two
+        queries pinned at different cluster epochs still read IDENTICAL
+        table snapshots when no commit touched the table in between, so
+        they may share one scan (the same clamp the block cache uses to
+        keep entries warm across unrelated trickle commits)."""
+        return min(t.pinned, self.db.table_epoch_ceiling(t.q.table))
+
+    def _shareable(self, q) -> bool:
+        """Single-table query shapes a shared scan can serve: joins need
+        build sides + SIP pushdown that are per-query by construction."""
+        return not q.joins and bool(q.aggs or q.group_by or q.columns
+                                    or q.derived)
+
+    def _working_set_bytes(self, plan, need) -> int:
+        """Decoded working-set estimate for one dispatch unit: rows
+        behind the plan's sources x (8-byte device lanes per needed
+        column + 1 mask byte).  The union of a coalesced group's columns
+        is charged ONCE -- sharing the scan is what makes N queries cost
+        one working set."""
+        rows = 0
+        for host, owner in plan.sources:
+            store = self.db.nodes[host].stores[owner]
+            rows += store.ros_rows() + store.wos.n_rows
+        return rows * (8 * max(len(need), 1) + 1)
+
+    def _admit_round(self) -> List[_Unit]:
+        """Admit up to ``max_concurrent`` dispatch units under the memory
+        budget: pick a priority class, pop its head as unit leader, then
+        coalesce compatible queued queries (any class) into its scan up
+        to ``max_coalesce``.  The first unit always admits -- otherwise
+        an oversized query could wedge the queue -- and its reservation
+        marks it ``oversized`` instead."""
+        cache = self.db.block_cache
+        budget = self.memory_budget_bytes
+        units: List[_Unit] = []
+        while len(units) < self.max_concurrent:
+            cls = self._pick_queue()
+            if cls is None:
+                break
+            queue = self._queues[cls]
+            leader = queue.popleft()
+            plan = self._plan(leader)
+            if plan is None:
+                continue   # rejected typed; try the next head
+            proj = self.db.catalog.projections[plan.projection]
+            leader.plan = plan
+            leader.scan_need = tuple(sorted(leader.q.scan_columns(proj)))
+            need_union = set(leader.scan_need)
+            ws = self._working_set_bytes(plan, need_union)
+            if units and cache.stats.reserved_bytes + ws > budget:
+                queue.appendleft(leader)   # no headroom: close the round
+                break
+            if cls == "interactive":
+                self._consec_interactive += 1
+            else:
+                self._consec_interactive = 0
+            group = [leader]
+            eff = self._effective_epoch(leader)
+            if self.max_coalesce > 1 and self._shareable(leader.q) \
+                    and self.db.mesh is None and leader.scan_need:
+                ws = self._gather_mates(group, plan, eff, need_union, ws)
+            oversized = ws > budget
+            cache.reserve(ws)
+            units.append(_Unit(group, plan, eff, ws, oversized))
+        return units
+
+    def _gather_mates(self, group: List[Ticket], plan, eff: int,
+                      need_union: set, ws: int) -> int:
+        """Pull queued queries compatible with the leader's scan into its
+        group: same table, same projection + sources, same effective
+        epoch, shareable shape, and the enlarged column union still fits
+        the memory budget.  Scans both classes -- a batch query riding an
+        interactive scan is the cheapest batch query there is."""
+        cache = self.db.block_cache
+        budget = self.memory_budget_bytes
+        leader = group[0]
+        for cls in PRIORITIES:
+            queue = self._queues[cls]
+            kept: deque = deque()
+            while queue and len(group) < self.max_coalesce:
+                t = queue.popleft()
+                q = t.q
+                if q.table != leader.q.table or not self._shareable(q) \
+                        or self._effective_epoch(t) != eff:
+                    kept.append(t)
+                    continue
+                mplan = self._plan(t)
+                if mplan is None:
+                    continue   # rejected typed
+                if mplan.projection != plan.projection \
+                        or mplan.sources != plan.sources:
+                    kept.append(t)
+                    continue
+                mproj = self.db.catalog.projections[mplan.projection]
+                mneed = tuple(sorted(q.scan_columns(mproj)))
+                if not mneed:
+                    kept.append(t)
+                    continue
+                new_union = need_union | set(mneed)
+                nws = self._working_set_bytes(plan, new_union)
+                if cache.stats.reserved_bytes + nws > budget:
+                    kept.append(t)   # the widened unit won't fit: an
+                    continue         # over-budget scan gathers no mates
+                t.plan, t.scan_need = mplan, mneed
+                need_union |= set(mneed)
+                ws = nws
+                group.append(t)
+            kept.extend(queue)
+            self._queues[cls] = kept
+        return ws
+
+    # --------------------------------------------------------- dispatch --
+
+    def _dispatch(self, unit: _Unit) -> None:
+        seq = next(self._dispatch_seq)
+        self.stats.dispatches += 1
+        now = time.time()
+        for t in unit.tickets:
+            t.state = "running"
+            t.stats.dispatch_seq = seq
+            t.stats.queue_wait_s = now - t.submitted_at
+            t.stats.reserved_bytes = unit.reserved
+            t.stats.oversized = unit.oversized
+            t.stats.share_group = len(unit.tickets)
+        try:
+            if len(unit.tickets) == 1:
+                self._run_solo(unit.tickets[0], unit.plan)
+            else:
+                self._run_shared(unit)
+        finally:
+            self.db.block_cache.release(unit.reserved)
+
+    def _run_solo(self, t: Ticket, plan) -> None:
+        """Un-coalesced dispatch: the ordinary single-query pipeline at
+        the ticket's pinned epoch (it carries its own failover loop)."""
+        t0 = time.time()
+        try:
+            out, es = execute(self.db, t.q, as_of=t.pinned, plan=plan)
+        except (QueryRejectedError, AvailabilityError) as e:
+            self._reject(t, e, kind="unavailable")
+            return
+        t.stats.exec_s = time.time() - t0
+        t.stats.failovers += es.failovers
+        self._complete(t, out, es)
+
+    def _run_shared(self, unit: _Unit) -> None:
+        """Coalesced dispatch with group-level failover: a node crash at
+        the ``serving.shared_scan`` point replans the whole group at the
+        SAME effective epoch (buddies hold identical rows, §4.3); if the
+        replanned group no longer co-plans, members fall back to solo
+        execution; exhausted budgets reject every member typed."""
+        db = self.db
+        tickets, plan, eff = unit.tickets, unit.plan, unit.epoch
+        retries_left = int(getattr(db, "max_failover_retries", 2))
+        t0 = time.time()
+        while True:
+            try:
+                fire_with_retries(db, "serving.shared_scan",
+                                  projection=plan.projection,
+                                  group=len(tickets))
+                results = self._shared_once(tickets, plan, eff)
+                break
+            except NodeCrashError as e:
+                for t in tickets:
+                    t.stats.failovers += 1
+                if retries_left <= 0:
+                    err = QueryRejectedError(
+                        f"failover budget exhausted (node {e.node} "
+                        f"crashed at {e.point})", epoch=eff,
+                        attempts=tickets[0].stats.failovers)
+                    for t in tickets:
+                        self._reject(t, err, kind="unavailable")
+                    return
+                retries_left -= 1
+                plan, eff = self._replan_group(unit)
+                if plan is None:
+                    # the group diverged after the crash: each survivor
+                    # finishes solo (with its own failover budget)
+                    for t in unit.tickets:
+                        if t.state == "running":
+                            self._run_solo(t, t.plan)
+                    return
+            except TransientFaultError as e:
+                err = QueryRejectedError(
+                    f"shared scan transient budget exhausted: {e}",
+                    epoch=eff)
+                for t in tickets:
+                    self._reject(t, err, kind="unavailable")
+                return
+        exec_s = time.time() - t0
+        self.stats.shared_scans += 1
+        self.stats.coalesced_max = max(self.stats.coalesced_max,
+                                       len(tickets))
+        for t, (out, es) in zip(tickets, results):
+            t.stats.exec_s = exec_s
+            self._complete(t, out, es)
+
+    def _replan_group(self, unit: _Unit):
+        """Replan every group member after a mid-scan crash.  Returns the
+        new (plan, effective epoch) when the group still co-plans onto
+        identical sources, else (None, None) to trigger solo fallback."""
+        leader = unit.tickets[0]
+        plan = self._plan(leader)
+        if plan is None:
+            return None, None
+        proj = self.db.catalog.projections[plan.projection]
+        leader.plan = plan
+        leader.scan_need = tuple(sorted(leader.q.scan_columns(proj)))
+        eff = self._effective_epoch(leader)
+        ok = True
+        for t in unit.tickets[1:]:
+            mplan = self._plan(t)
+            if mplan is None:
+                ok = False
+                continue
+            t.plan = mplan
+            mproj = self.db.catalog.projections[mplan.projection]
+            t.scan_need = tuple(sorted(t.q.scan_columns(mproj)))
+            if mplan.projection != plan.projection \
+                    or mplan.sources != plan.sources \
+                    or self._effective_epoch(t) != eff:
+                ok = False
+        if not ok:
+            return None, None
+        unit.plan, unit.epoch = plan, eff
+        return plan, eff
+
+    # ------------------------------------------------------ shared scan --
+
+    def _scan_would_be_empty(self, t: Ticket) -> bool:
+        """Would this query's OWN scan -- with its SMA pruning pushed
+        down -- yield no blocks and no WOS rows?  Independent execution
+        returns the structured ``_empty_result`` in that case, which is
+        NOT always bitwise-equal to aggregating an all-false mask (a
+        fully-pruned scalar min is 0-length-empty, a fully-masked one is
+        a sentinel), so the coalesced path must detect it explicitly to
+        stay byte-identical.  Host-side and cheap: reads only SMA
+        arrays, exactly like the pruning it mirrors."""
+        db, q, plan = self.db, t.q, t.plan
+        proj = db.catalog.projections[plan.projection]
+        scan_pred = q.scan_predicate(proj.columns)
+        if scan_pred is None:
+            bounds = {}
+        else:
+            bounds = scan_pred.bounds()
+        need = t.scan_need
+        for host, owner in plan.sources:
+            store = db.nodes[host].stores[owner]
+            if store.wos.n_rows:
+                return False
+            for c in store.containers:
+                if not need:
+                    continue
+                nb = c.columns[need[0]].n_blocks
+                keep = np.ones(nb, dtype=bool)
+                for colname, (lo, hi) in bounds.items():
+                    if colname in c.smas:
+                        keep &= c.smas[colname].prune_blocks(lo, hi)
+                if keep.any():
+                    return False
+        return True
+
+    def _shared_once(self, tickets: List[Ticket], plan, eff: int
+                     ) -> List[Tuple[Dict[str, np.ndarray], ExecStats]]:
+        """ONE unpruned scan of the group's column union at the effective
+        epoch, then one mask->aggregate pass per member.
+
+        Why results are byte-identical to independent execution: the only
+        rows present here and absent from a member's own scan are rows of
+        blocks its SMA pruning would have dropped -- every such row fails
+        the member's predicate, so it enters aggregation masked-invalid,
+        and the aggregation kernels give invalid rows exactly-zero /
+        sentinel contributions (operators._prep_agg).  Adding exact zeros
+        changes no sum bitwise; group ordering is by key value, identical
+        under packing either way; and the per-member programs make the
+        same algorithm/domain choices as the dedicated path
+        (executor.fused_plan_params).  The one asymmetry -- a scan pruned
+        to NOTHING returns the structured empty result -- is mirrored by
+        ``_scan_would_be_empty``."""
+        db = self.db
+        need_union = sorted(set().union(*(set(t.scan_need)
+                                          for t in tickets)))
+        scan_stats = ExecStats(projection=plan.projection)
+        bc = db.block_cache.stats
+        bc_h0, bc_m0 = bc.hits, bc.misses
+        scans = []
+        ros = fused_exec.scan_stores_batched(db, plan, need_union, None,
+                                             None, eff, scan_stats)
+        if ros is not None:
+            scans.append(ros)
+        wos_parts = wos_scan_results(db, plan, need_union, None, None, eff)
+        scans.extend(wos_parts)
+        merged = ops.concat_scans(scans)
+        has_wos = bool(wos_parts)
+
+        results = []
+        for i, t in enumerate(tickets):
+            q = t.q
+            es = ExecStats(projection=plan.projection,
+                           groupby_algorithm=t.plan.groupby_algorithm)
+            es.snapshot_epoch = t.pinned
+            es.containers_scanned = scan_stats.containers_scanned
+            es.blocks_total = scan_stats.blocks_total
+            t.stats.shared_scan = "leader" if i == 0 else "member"
+            if merged is None or self._scan_would_be_empty(t):
+                results.append((_finalize(q, _empty_result(q)), es))
+                continue
+            es.rows_scanned = int(merged.valid.shape[0])
+            cols = {c: merged.columns[c] for c in t.scan_need}
+            valid = merged.valid
+            out = None
+            if not has_wos:
+                # same eligibility gate as the dedicated fused path: WOS
+                # rows ride an unencoded side-scan the program can't take
+                out = fused_exec.execute_shared_fused(db, q, t.plan, cols,
+                                                      valid, es)
+                if out is not None:
+                    es.fused = True
+            if out is None:
+                # general (untraced) operators -- the same code the solo
+                # pipeline runs after its scan
+                cols = dict(cols)
+                for name, e in q.derived:
+                    cols[name] = e(cols)
+                if q.predicate is not None:
+                    valid = valid & jnp.asarray(q.predicate(cols), bool)
+                if q.group_by or q.aggs:
+                    out = _run_groupby(q, t.plan, cols, valid, es)
+                else:
+                    mask = np.asarray(valid)
+                    keep = set(q.columns) | {n for n, _ in q.derived}
+                    out = {c: np.asarray(v)[mask] for c, v in cols.items()
+                           if (c in keep) or (not keep and c != "_matched")}
+            es.block_cache_hits = bc.hits - bc_h0
+            es.block_cache_misses = bc.misses - bc_m0
+            results.append((_finalize(q, out), es))
+        return results

@@ -1,0 +1,411 @@
+"""Serving-layer tests (engine/serving.py): admission control, priority
+queues, epoch-pin lifecycle, shared-scan byte-identity, memory budget,
+fault injection at the serving points.
+
+The headline differential test proves coalesced shared-scan results are
+BYTE-IDENTICAL to independent execution -- not allclose: the shared scan
+skips SMA pruning and predicate pushdown, and the claim is that masked
+aggregation makes that invisible bitwise (see serving._shared_once).
+Float test data is quarter-valued so sums are exact regardless of
+accumulation order; the comparison is exact equality after dtype
+normalization (int->int64, float->float64 -- device arrays are 32-bit).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ColumnDef, CrashNode, QueryRejectedError, SQLType,
+                        TableSchema, Transient, VerticaDB)
+from repro.core.recovery import recover_node
+from repro.engine import col, execute
+
+from test_fault_chaos import repair_all
+
+
+def make_db(n_nodes=4, k_safety=1, block_rows=64, n_per_wave=1000,
+            waves=3, seed=7, n_cids=50):
+    """A K-safe cluster with several ROS containers per store (one per
+    trickle wave) so shared scans have real concat work to coalesce."""
+    rng = np.random.default_rng(seed)
+    db = VerticaDB(n_nodes=n_nodes, k_safety=k_safety,
+                   block_rows=block_rows)
+    db.create_table(
+        TableSchema("sales", (ColumnDef("sale_id"), ColumnDef("cid"),
+                              ColumnDef("day"), ColumnDef("qty"),
+                              ColumnDef("price", SQLType.FLOAT))),
+        sort_order=("day",), segment_by=("sale_id",))
+    off = 0
+    for _ in range(waves):
+        t = db.begin()
+        db.insert(t, "sales", wave_rows(rng, off, n_per_wave, n_cids))
+        db.commit(t)
+        off += n_per_wave
+        db.run_tuple_mover(force_moveout=True, do_mergeout=False)
+    return db
+
+
+def wave_rows(rng, off, n, n_cids=50):
+    return {
+        "sale_id": np.arange(off, off + n),
+        "cid": rng.integers(0, n_cids, n),
+        "day": np.sort(rng.integers(0, 365, n)),
+        "qty": rng.integers(1, 10, n),
+        # quarter-valued floats: sums/avgs are exact in float32, so
+        # byte-identity cannot be broken by accumulation order
+        "price": rng.integers(0, 400, n).astype(np.float64) / 4}
+
+
+def corpus(db):
+    """Shareable query shapes spanning every per-member execution path:
+    fused dense/sort groupbys, scalar aggregates, composite keys,
+    derived columns, HAVING/ORDER/LIMIT, plain selects."""
+    q = db.query
+    return [
+        q("sales").group_by("cid").agg(n=("*", "count")).to_ir(),
+        q("sales").where(col("day") < 180).group_by("cid")
+        .agg(rev=("price", "sum"), n=("*", "count")).to_ir(),
+        q("sales").where((col("cid") >= 10) & (col("cid") < 40))
+        .group_by("day").agg(mx=("price", "max")).to_ir(),
+        q("sales").agg(total=("qty", "sum")).to_ir(),
+        q("sales").where(col("qty") > 5).agg(n=("*", "count"),
+                                             lo=("price", "min")).to_ir(),
+        q("sales").group_by("cid", "qty").agg(s=("price", "sum")).to_ir(),
+        q("sales").where(col("day") >= 300).group_by("cid")
+        .agg(avg_p=("price", "avg")).having(col("avg_p") > 40)
+        .order_by("-avg_p").limit(7).to_ir(),
+        q("sales").select(margin=col("price") * col("qty"))
+        .group_by("cid").agg(m=("margin", "sum")).to_ir(),
+        q("sales").where(col("day") == 33)
+        .select("sale_id", "cid", "price").to_ir(),
+        q("sales").where(col("cid") == 7).group_by("day")
+        .agg(n=("*", "count")).order_by("day").to_ir(),
+        # pruned-to-empty predicate: the structured-empty parity case
+        q("sales").where(col("day") > 9000).group_by("cid")
+        .agg(s=("price", "sum")).to_ir(),
+        q("sales").where(col("day") > 9000).agg(lo=("price", "min")).to_ir(),
+    ]
+
+
+def assert_identical(ref, out, label=""):
+    """Exact equality after dtype normalization -- NOT allclose."""
+    assert set(ref) == set(out), (label, set(ref), set(out))
+    for c in ref:
+        a, b = np.asarray(ref[c]), np.asarray(out[c])
+        assert a.shape == b.shape, (label, c, a.shape, b.shape)
+        if a.dtype.kind == "f" or b.dtype.kind == "f":
+            a, b = a.astype(np.float64), b.astype(np.float64)
+        else:
+            a, b = a.astype(np.int64), b.astype(np.int64)
+        assert np.array_equal(a, b), (label, c, a[:8], b[:8])
+
+
+@pytest.fixture(scope="module")
+def serving_db():
+    return make_db()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: shared scans are byte-identical to independent execution
+# ---------------------------------------------------------------------------
+
+def test_shared_scan_differential_byte_identical(serving_db):
+    db = serving_db
+    qs = corpus(db)
+    refs = [execute(db, q)[0] for q in qs]
+
+    svc = db.serve(queue_depth=len(qs) + 1, max_coalesce=len(qs),
+                   max_concurrent=2)
+    with svc.session("interactive") as s:
+        tickets = [s.submit(q) for q in qs]
+    svc.drain()
+
+    shared = 0
+    for q, ref, t in zip(qs, refs, tickets):
+        assert_identical(ref, t.result(), label=str(t.id))
+        shared += bool(t.stats.shared_scan)
+    # the corpus is one table + one projection + one epoch: it coalesces
+    assert shared >= len(qs) - 2, [t.stats.shared_scan for t in tickets]
+    assert svc.stats.shared_scans >= 1
+    assert svc.stats.shared_hit_rate() > 0
+    assert db.epochs.n_pinned() == 0
+
+
+def test_shared_scan_differential_with_pending_wos(serving_db):
+    """Trickle-loaded rows sitting in the WOS (fused path ineligible for
+    everyone) still coalesce byte-identically via the general path."""
+    db = serving_db
+    rng = np.random.default_rng(99)
+    t = db.begin()
+    db.insert(t, "sales", wave_rows(rng, 50_000, 120))
+    db.commit(t)
+    try:
+        qs = corpus(db)
+        refs = [execute(db, q)[0] for q in qs]
+        svc = db.serve(queue_depth=len(qs) + 1, max_coalesce=len(qs))
+        tickets = [svc.submit(q) for q in qs]
+        svc.drain()
+        for q, ref, tk in zip(qs, refs, tickets):
+            assert_identical(ref, tk.result(), label=str(tk.id))
+            assert not (tk.stats.exec_stats and tk.stats.exec_stats.fused)
+        assert db.epochs.n_pinned() == 0
+    finally:
+        db.run_tuple_mover(force_moveout=True, do_mergeout=False)
+
+
+def test_shared_plan_cache_hits_across_services(serving_db):
+    """The 'shared'-prefixed fused programs are plan-cached: a second
+    service running the same mix hits instead of re-tracing."""
+    db = serving_db
+    qs = [q for q in corpus(db) if q.aggs]
+    for _ in range(2):
+        svc = db.serve(queue_depth=len(qs) + 1, max_coalesce=len(qs))
+        tickets = [svc.submit(q) for q in qs]
+        svc.drain()
+    hits = [t.stats.exec_stats.plan_cache == "hit" for t in tickets
+            if t.stats.exec_stats is not None and t.stats.exec_stats.fused]
+    assert hits and all(hits)
+
+
+# ---------------------------------------------------------------------------
+# satellite: epoch-pin lifecycle under rejection
+# ---------------------------------------------------------------------------
+
+def test_queue_flood_leaves_zero_stray_pins(serving_db):
+    db = serving_db
+    assert db.epochs.n_pinned() == 0
+    svc = db.serve(queue_depth=3, max_coalesce=1, max_concurrent=1)
+    q = db.query("sales").group_by("cid").agg(n=("*", "count")).to_ir()
+    accepted, rejected = [], 0
+    for _ in range(20):
+        try:
+            accepted.append(svc.submit(q))
+        except QueryRejectedError:
+            rejected += 1
+    assert rejected == 20 - 3
+    # rejected submissions never pinned; queued ones hold exactly one each
+    assert db.epochs.n_pinned() == len(accepted) == 3
+    svc.drain()
+    assert all(t.done for t in accepted)
+    assert db.epochs.n_pinned() == 0
+    assert svc.stats.rejected_queue_full == rejected
+
+
+def test_queue_timeout_rejects_typed_and_unpins(serving_db):
+    db = serving_db
+    svc = db.serve(queue_depth=8, default_timeout_s=0.0)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+    t = svc.submit(q)
+    assert db.epochs.n_pinned() == 1
+    import time
+    time.sleep(0.01)
+    svc.step()
+    assert t.state == "rejected"
+    assert t.stats.rejected_reason == "timeout"
+    with pytest.raises(QueryRejectedError):
+        t.result()
+    assert db.epochs.n_pinned() == 0
+    assert svc.stats.rejected_timeout == 1
+
+
+def test_ahm_unblocked_after_flood(serving_db):
+    """After a flood + drain, the AHM can advance past every epoch the
+    flood pinned (the regression the satellite names: a stray pin would
+    cap advance_ahm forever)."""
+    db = serving_db
+    svc = db.serve(queue_depth=4)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+    for _ in range(10):
+        try:
+            svc.submit(q)
+        except QueryRejectedError:
+            pass
+    svc.drain()
+    assert db.epochs.n_pinned() == 0
+    db.epochs.advance_ahm(db.epochs.latest_queryable())
+    assert db.epochs.ahm == db.epochs.latest_queryable()
+
+
+# ---------------------------------------------------------------------------
+# satellite: priority ordering + serving semantics under load
+# ---------------------------------------------------------------------------
+
+def test_priority_ordering_with_batch_boost(serving_db):
+    db = serving_db
+    svc = db.serve(queue_depth=16, max_coalesce=1, max_concurrent=1,
+                   batch_boost_after=2)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+    batch = [svc.submit(q, priority="batch") for _ in range(4)]
+    inter = [svc.submit(q, priority="interactive") for _ in range(4)]
+    svc.drain()
+    iseq = [t.stats.dispatch_seq for t in inter]
+    bseq = [t.stats.dispatch_seq for t in batch]
+    # interactive queries all finish before the LAST batch query ...
+    assert max(iseq) < max(bseq)
+    # ... but the anti-starvation boost let batch through mid-stream
+    assert min(bseq) < max(iseq)
+    assert svc.stats.batch_boosts >= 1
+    assert db.epochs.n_pinned() == 0
+
+
+def test_snapshot_consistency_under_trickle_commits():
+    """Queries pinned before a commit never see it, even when they are
+    dispatched after it; commits are all-or-nothing per snapshot."""
+    db = make_db(waves=2, n_per_wave=500)
+    rng = np.random.default_rng(5)
+    svc = db.serve(queue_depth=16)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+
+    t_before = svc.submit(q)
+    n_before = int(execute(db, q, as_of=t_before.pinned)[0]["n"][0])
+    for k in range(3):       # trickle while queued: 3 commits of 100 rows
+        t = db.begin()
+        db.insert(t, "sales", wave_rows(rng, 10_000 + 100 * k, 100))
+        db.commit(t)
+        t_mid = svc.submit(q)
+        # every snapshot counts a whole number of 100-row commits
+        got = int(execute(db, q, as_of=t_mid.pinned)[0]["n"][0])
+        assert (got - n_before) % 100 == 0
+    t_after = svc.submit(q)
+    svc.drain()
+    assert int(t_before.result()["n"][0]) == n_before
+    assert int(t_after.result()["n"][0]) == n_before + 300
+    assert db.epochs.n_pinned() == 0
+
+
+def test_session_pool_bounded(serving_db):
+    svc = serving_db.serve(max_sessions=2)
+    s1, s2 = svc.session(), svc.session("batch")
+    with pytest.raises(QueryRejectedError):
+        svc.session()
+    s1.close()
+    s3 = svc.session()          # freed slot is reusable
+    with pytest.raises(QueryRejectedError):
+        s1.submit(serving_db.query("sales").agg(n=("*", "count")))
+    s2.close(), s3.close()
+
+
+# ---------------------------------------------------------------------------
+# memory budget
+# ---------------------------------------------------------------------------
+
+def test_memory_budget_bounds_coalescing_and_concurrency(serving_db):
+    db = serving_db
+    qs = [db.query("sales").group_by("cid").agg(n=("*", "count")).to_ir(),
+          db.query("sales").group_by("cid")
+          .agg(s=("price", "sum")).to_ir()] * 3
+    # generous budget: everything coalesces into one reservation
+    svc = db.serve(queue_depth=16, memory_budget_bytes=1 << 30)
+    tickets = [svc.submit(q) for q in qs]
+    svc.drain()
+    assert all(t.stats.share_group >= 2 for t in tickets)
+    assert db.block_cache.stats.reserved_bytes == 0      # all released
+    assert db.block_cache.stats.peak_reserved_bytes > 0
+    assert all(not t.stats.oversized for t in tickets)
+
+    # starvation budget: nothing coalesces (each unit alone overflows,
+    # admitted solo + flagged oversized), answers still correct
+    ref = execute(db, qs[0])[0]
+    svc2 = db.serve(queue_depth=16, memory_budget_bytes=1024)
+    tickets2 = [svc2.submit(q) for q in qs]
+    svc2.drain()
+    assert all(t.stats.share_group == 1 for t in tickets2)
+    assert all(t.stats.oversized for t in tickets2)
+    assert_identical(ref, tickets2[0].result())
+    assert db.block_cache.stats.reserved_bytes == 0
+    assert db.epochs.n_pinned() == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: fault injection at the serving points
+# ---------------------------------------------------------------------------
+
+def test_admit_transient_exhaustion_rejects_typed():
+    db = make_db(waves=1, n_per_wave=400)
+    inj = db.enable_faults(seed=3)
+    inj.on("serving.admit", Transient(), times=inj.max_attempts)
+    svc = db.serve(queue_depth=8)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+    with pytest.raises(QueryRejectedError):
+        svc.submit(q)
+    assert db.epochs.n_pinned() == 0       # rejected before any pin
+    assert svc.stats.rejected_admission == 1
+    # the budget consumed the schedule: the next submit sails through
+    t = svc.submit(q)
+    svc.drain()
+    assert int(t.result()["n"][0]) == 400
+    db.disable_faults()
+
+
+def test_admit_transient_blip_retries_through():
+    db = make_db(waves=1, n_per_wave=400)
+    inj = db.enable_faults(seed=3)
+    inj.on("serving.admit", Transient(), times=1)   # one blip < budget
+    svc = db.serve(queue_depth=8)
+    t = svc.submit(db.query("sales").agg(n=("*", "count")))
+    svc.drain()
+    assert int(t.result()["n"][0]) == 400
+    assert inj.fired("serving.admit") == 1
+    db.disable_faults()
+
+
+def test_mid_shared_scan_crash_fails_over_once():
+    db = make_db()
+    qs = [db.query("sales").group_by("cid").agg(n=("*", "count")).to_ir(),
+          db.query("sales").where(col("day") < 180).group_by("cid")
+          .agg(rev=("price", "sum")).to_ir(),
+          db.query("sales").agg(total=("qty", "sum")).to_ir()]
+    refs = [execute(db, q)[0] for q in qs]
+
+    inj = db.enable_faults(seed=11)
+    inj.on("serving.shared_scan", CrashNode(node=1), hit=1)
+    svc = db.serve(queue_depth=8, max_coalesce=8)
+    tickets = [svc.submit(q) for q in qs]
+    svc.drain()
+    assert not db.nodes[1].up
+    for ref, t in zip(refs, tickets):
+        assert_identical(ref, t.result(), label=str(t.id))
+        assert t.stats.failovers == 1      # one crash, one group replan
+    assert db.epochs.n_pinned() == 0
+    db.disable_faults()
+    repair_all(db)
+
+
+def test_serving_chaos_right_answer_or_typed(serving_db=None):
+    """Seeded chaos over BOTH serving points at once: every ticket either
+    matches the post-repair oracle at its own pinned epoch or rejected
+    with the typed error -- never a silently wrong answer."""
+    for seed in (7, 19):
+        db = make_db(waves=2, n_per_wave=600)
+        qs = corpus(db)[:6]
+        inj = db.enable_faults(seed=seed)
+        inj.chaos(("serving.admit", "serving.shared_scan"), p=0.25,
+                  action=CrashNode(respect_k_safety=True))
+        inj.chaos(("serving.admit", "serving.shared_scan"), p=0.15,
+                  action=Transient())
+        svc = db.serve(queue_depth=32, max_coalesce=4, max_concurrent=2)
+        tickets = []
+        for rnd in range(2):
+            for q in qs:
+                try:
+                    tickets.append((q, svc.submit(q)))
+                except QueryRejectedError:
+                    pass                    # typed admission rejection: fine
+            svc.drain()
+        db.disable_faults()
+        repair_all(db)
+        done = 0
+        for q, t in tickets:
+            assert t.done
+            if t.state == "rejected":
+                assert isinstance(t.error, Exception), t.error
+                continue
+            oracle = execute(db, q, as_of=t.stats.snapshot_epoch)[0]
+            assert_identical(oracle, t._result, label=f"seed{seed}:{t.id}")
+            done += 1
+        assert done >= 1, f"seed {seed}: every ticket rejected"
+        assert db.epochs.n_pinned() == 0
+
+
+def test_injection_point_registry_covers_serving():
+    from repro.core import INJECTION_POINTS
+    assert "serving.admit" in INJECTION_POINTS
+    assert "serving.shared_scan" in INJECTION_POINTS
