@@ -146,6 +146,69 @@ def _time(fn, reps=3):
     return min(ts)
 
 
+# the single-table segmented subset of the workload (joins go through
+# the same executor but their dim placement cost is covered by the
+# differential tests; this tracks the scan->exchange->aggregate spine)
+SEG_NAMES = ("Q2", "Q3", "Q4", "Q6")
+
+
+def _run_mesh8():
+    """Subprocess entry (``--mesh8``): re-run the segmented subset on a
+    forced 8-device host mesh and print one JSON line.  Device count is
+    fixed at process start, so the scale-out point needs its own
+    process; the parent treats any failure as 'skipped'."""
+    import json
+    n_fact = QUICK_N_FACT if _quick() else N_FACT
+    n_dim = QUICK_N_DIM if _quick() else N_DIM
+    db = build_db(n_fact, n_dim)
+    queries = {n: qb.to_ir() for n, qb in make_builders(db).items()}
+    single = sum(_time(lambda q=queries[n]: execute(db, q)[0])
+                 for n in SEG_NAMES)
+    mesh = db.attach_mesh()
+    n_shards = int(mesh.shape["data"])
+    seg = 0.0
+    seg_all = True
+    for name in SEG_NAMES:
+        last = {}
+
+        def run_seg(q=queries[name], last=last):
+            out, st = execute(db, q)
+            last["stats"] = st
+            return out
+        seg += _time(run_seg)
+        seg_all &= last["stats"].segmented
+    db.detach_mesh()
+    print(json.dumps({
+        "n_shards": n_shards, "n_fact": n_fact,
+        "segmented_s": seg, "single_node_s": single,
+        "speedup_vs_single_node": single / seg,
+        "all_segmented": bool(seg_all)}))
+
+
+def _mesh8_row(timeout_s: int = 2400):
+    """The 8-device mesh tier of the segmented bench, via subprocess
+    (XLA device count is a process-start flag).  Never breaks the main
+    bench: any failure or REPRO_BENCH_SKIP_MESH8=1 records a skip."""
+    import json
+    import subprocess
+    if os.environ.get("REPRO_BENCH_SKIP_MESH8", "") == "1":
+        return {"skipped": "REPRO_BENCH_SKIP_MESH8=1"}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--mesh8"],
+            env=env, capture_output=True, text=True, timeout=timeout_s,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        line = [ln for ln in proc.stdout.strip().splitlines()
+                if ln.startswith("{")][-1]
+        return json.loads(line)
+    except Exception as e:                        # noqa: BLE001
+        return {"skipped": f"{type(e).__name__}: {e}"[:200]}
+
+
 # fixed small size: the failover bench measures the retry/replan
 # machinery and buddy routing, not scan throughput, so it does not
 # scale with --quick
@@ -269,7 +332,7 @@ def run(report):
     # the multi-device executor (engine/segmented.py); on a 1-device CPU
     # run this measures pure segmentation overhead, on N devices the
     # scale-out win.  Recorded into BENCH_cstore.json PR-over-PR. ---
-    seg_names = ("Q2", "Q3", "Q4", "Q6")
+    seg_names = SEG_NAMES
     mesh = db.attach_mesh()
     n_shards = int(mesh.shape["data"])
     seg_total = 0.0
@@ -295,6 +358,18 @@ def run(report):
           f"{seg_total*1e3:.1f}ms vs single-node "
           f"{single_total*1e3:.1f}ms = "
           f"{single_total/seg_total:.2f}x over {list(seg_names)}")
+    # scale-out point: same subset on a forced 8-device host mesh (its
+    # own process; XLA fixes device count at start).  Records BOTH the
+    # 1-shard overhead ratio above and the mesh-tier ratio PR-over-PR.
+    seg_row["mesh8"] = _mesh8_row()
+    m8 = seg_row["mesh8"]
+    if "skipped" in m8:
+        print(f"[cstore] segmented mesh8: skipped ({m8['skipped']})")
+    else:
+        print(f"[cstore] segmented mesh8 ({m8['n_shards']} shards): "
+              f"{m8['segmented_s']*1e3:.1f}ms vs single-node "
+              f"{m8['single_node_s']*1e3:.1f}ms = "
+              f"{m8['speedup_vs_single_node']:.2f}x")
 
     # --- failover overhead (K-safety, §4.3): warm latency on a healthy
     # cluster vs the one-shot mid-query failover (node crash + replan
@@ -334,4 +409,7 @@ def run(report):
 
 
 if __name__ == "__main__":
-    run(lambda k, v: None)
+    if "--mesh8" in sys.argv:
+        _run_mesh8()
+    else:
+        run(lambda k, v: None)

@@ -37,7 +37,8 @@ timeout "$T_FAST" python -m pytest -q -x -p no:cacheprovider \
     tests/test_crash_replay_props.py \
     tests/test_locks.py \
     tests/test_faults.py \
-    tests/test_serving.py
+    tests/test_serving.py \
+    tests/test_kernels_seg_preagg.py
 
 echo "== docs tier: README/DESIGN snippets must run green =="
 timeout "$T_DOCS" python scripts/check_docs.py
@@ -96,6 +97,17 @@ print(f"[verify] warm total vs previous: {ratio:.2f}x "
 if ratio > tol:
     sys.exit(f"[verify] PERF REGRESSION: warm total {ratio:.2f}x slower "
              f"than previous run (> {tol:.2f}x)")
+# segmented-vs-single-node gate: the device-resident slab path must not
+# slide back toward host round-trips (ratio is mesh-size-normalized --
+# both runs are 1-shard quick mode here)
+sp = cur.get("segmented", {}).get("speedup_vs_single_node")
+pp = prev.get("segmented", {}).get("speedup_vs_single_node")
+if sp is not None:
+    print(f"[verify] segmented speedup vs single-node: {sp:.2f}x"
+          + (f" (previous {pp:.2f}x)" if pp is not None else ""))
+    if pp is not None and sp < pp / tol:
+        sys.exit(f"[verify] PERF REGRESSION: segmented ratio {sp:.2f}x "
+                 f"fell below previous {pp:.2f}x / {tol:.2f}")
 EOF
 
 echo "== quick serving benchmark =="

@@ -43,6 +43,7 @@ CacheKey = Tuple[int, str, str]
 KIND_ENCODED = "encoded"                  # dict of device payload arrays
 KIND_DECODED = "decoded"                  # (n_blocks, block_rows) device array
 KIND_SEG = "segmented"                    # per-shard partitioned scan slabs
+KIND_WOS = "wos_slab"                     # per-shard device WOS buffers
 
 
 @dataclasses.dataclass

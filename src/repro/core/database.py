@@ -23,7 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .block_cache import BlockCache, KIND_SEG
+from .block_cache import BlockCache, KIND_SEG, KIND_WOS
 from .catalog import Catalog, TableEntry
 from .epochs import EpochManager
 from .faults import (NULL_INJECTOR, FaultInjector, NodeCrashError,
@@ -422,6 +422,15 @@ class VerticaDB:
                 store.wos.append(data, epoch, segs, ring=ring)
                 n = len(segs)
                 store.wos_delete_epochs.append(np.zeros(n, np.int64))
+        # stream the fresh WOS batches into their per-shard device buffers
+        # while the rows are hot: a trickle-load commit pre-pays the
+        # segmented executor's delta slab, so the next query only uploads
+        # a visibility mask (engine/segmented.prewarm_wos_buffer; no-op
+        # without an attached mesh)
+        if self.mesh is not None and not txn.direct_to_ros:
+            from ..engine.segmented import prewarm_wos_buffer
+            for (proj_name, node_id) in txn.staged:
+                prewarm_wos_buffer(self, node_id, proj_name)
         self.locks.release_all(txn.id)
         return epoch
 
@@ -522,6 +531,9 @@ class VerticaDB:
                            else np.zeros(len(eps), np.int64))
                     cur = np.where(m & (cur == 0), epoch, cur)
                     store.wos_delete_epochs = [cur]
+                    # WOS content-version covers delete state too: the
+                    # segmented executor's device WOS buffers key on it
+                    store.wos.version += 1
 
     # ----------------------------------------------------------- reads --
 
@@ -719,6 +731,13 @@ class VerticaDB:
 
         def references_node(key) -> bool:
             _, col, kind = key
+            if kind == KIND_WOS:
+                # (("wos", version, mesh_sig), host, owner): the buffer
+                # is one store's rows -- the dead node's are gone with it
+                try:
+                    return col[1] == node_id
+                except (TypeError, IndexError):
+                    return True
             if kind != KIND_SEG:
                 return False
             if not (isinstance(col, tuple) and len(col) >= 3):

@@ -45,6 +45,73 @@ def shard_of(ring: np.ndarray, n_shards: int) -> np.ndarray:
             / float(C_MAX)).astype(np.int64).astype(np.int32)
 
 
+# --------------------------------------------------------------------------
+# Device twins of hash_columns / shard_of (jax, 32-bit safe)
+# --------------------------------------------------------------------------
+# The segmented executor builds its ROS slabs ON device (resegment over
+# decoded device blocks), so ring values and shard assignments must be
+# computable inside a jitted program -- bit-for-bit equal to the numpy
+# originals above, because the host still places build sides and WOS
+# batches with them and a co-located join relies on both agreeing.
+#
+# jax runs 32-bit by default (no uint64), so the 64-bit FNV state is kept
+# as a (hi32, lo32) uint32 pair.  The FNV prime 0x100000001B3 splits into
+# hi=0x100, lo=0x1B3; a 64x64 wrapping multiply by it needs only
+#   lo' = lo * 0x1B3                          (wrapping u32)
+#   hi' = mulhi32(lo, 0x1B3) + (lo << 8) + hi * 0x1B3
+# and the 16-bit XOR words never touch the high half.  The final
+# ``% C_MAX`` (C_MAX = 2^32) is just the low word.
+
+_P_LO = 0x1B3          # low 32 bits of the FNV prime
+
+
+def _mulhi32_small(a, m: int):
+    """High 32 bits of (uint32 a) * (m < 2^16), in uint32 arithmetic."""
+    import jax.numpy as jnp
+    a = a.astype(jnp.uint32)
+    a1 = a >> jnp.uint32(16)
+    a0 = a & jnp.uint32(0xFFFF)
+    t = a0 * jnp.uint32(m)
+    u = a1 * jnp.uint32(m)
+    return (u + (t >> jnp.uint32(16))) >> jnp.uint32(16)
+
+
+def hash_columns_jnp(*cols):
+    """Device twin of :func:`hash_columns`.  Accepts int/uint/bool columns
+    (<= 32 bits wide, the slab canonicalization width) and returns the
+    uint32 ring value, bit-identical to ``hash_columns(...) % C_MAX``."""
+    import jax.numpy as jnp
+    h_hi = jnp.full(cols[0].shape, 0xCBF29CE4, jnp.uint32)   # FNV offset
+    h_lo = jnp.full(cols[0].shape, 0x84222325, jnp.uint32)
+    for c in cols:
+        signed = c.dtype.kind in "ib"
+        v = c.astype(jnp.int32) if signed else c.astype(jnp.uint32)
+        w0 = v.astype(jnp.uint32) & jnp.uint32(0xFFFF)
+        w1 = (v >> 16).astype(jnp.uint32) & jnp.uint32(0xFFFF)
+        # int64 sign extension: negative values fill words 2..3 with 1s
+        ext = jnp.where(v < 0, jnp.uint32(0xFFFF), jnp.uint32(0)) \
+            if signed else jnp.zeros_like(w0)
+        for w in (w0, w1, ext, ext):
+            h_lo = h_lo ^ w
+            new_lo = h_lo * jnp.uint32(_P_LO)
+            h_hi = (_mulhi32_small(h_lo, _P_LO) + (h_lo << jnp.uint32(8))
+                    + h_hi * jnp.uint32(_P_LO))
+            h_lo = new_lo
+    return h_lo                                   # == full hash % 2^32
+
+
+def shard_of_jnp(ring, n_shards: int):
+    """Device twin of :func:`shard_of`: floor(ring * n / 2^32) via 16-bit
+    limbs (exact for n_shards < 2^16, far beyond any mesh width)."""
+    import jax.numpy as jnp
+    r = ring.astype(jnp.uint32)
+    r1 = r >> jnp.uint32(16)
+    r0 = r & jnp.uint32(0xFFFF)
+    t = r0 * jnp.uint32(n_shards)
+    u = r1 * jnp.uint32(n_shards)
+    return ((u + (t >> jnp.uint32(16))) >> jnp.uint32(16)).astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentationSpec:
     """SEGMENTED BY HASH(cols) ALL NODES / UNSEGMENTED (replicated)."""

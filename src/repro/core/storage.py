@@ -147,6 +147,12 @@ class WOS:
     # None for batches of replicated projections / legacy callers
     rings: List[Optional[np.ndarray]] = dataclasses.field(
         default_factory=list)
+    # monotonic content-version: bumped on every mutation (append / clear /
+    # truncate, and by the database when WOS delete epochs change).  The
+    # segmented executor keys its commit-time per-shard device WOS buffers
+    # (engine/segmented.py) by this counter, so a stale buffer simply
+    # becomes an unreachable cache entry -- no explicit invalidation walk.
+    version: int = 0
 
     @property
     def n_rows(self) -> int:
@@ -171,6 +177,7 @@ class WOS:
         self.local_segments.append(np.asarray(local_segment, np.int32))
         self.rings.append(None if ring is None
                           else np.asarray(ring, np.uint64))
+        self.version += 1
 
     def snapshot(self) -> Tuple[Dict[str, np.ndarray], np.ndarray,
                                 np.ndarray]:
@@ -198,10 +205,12 @@ class WOS:
         self.epochs = [eps[keep]]
         self.local_segments = [segs[keep]]
         self.rings = [None if rings is None else rings[keep]]
+        self.version += 1
 
     def clear(self):
         self.data, self.epochs, self.local_segments = {}, [], []
         self.rings = []
+        self.version += 1
 
     def memory_bytes(self) -> float:
         return sum(v.nbytes for arrs in self.data.values() for v in arrs)

@@ -22,6 +22,42 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def resegment_local(axis: str, n_shards: int, per: int, dest_l: jax.Array,
+                    vals: Tuple[jax.Array, ...]
+                    ) -> Tuple[Tuple[jax.Array, ...], jax.Array, jax.Array]:
+    """Per-shard body of :func:`resegment`, callable from INSIDE another
+    ``shard_map``'d program (the segmented executor fuses this with the
+    join + pre-aggregation stage so a multi-join query dispatches one
+    program per stage instead of blocking on a host get between the
+    exchange and the join).  ``dest_l`` is the (n_local,) destination
+    shard per local row; returns (moved value tuple, valid, overflow),
+    each moved value flat with ``n_shards * per`` slots."""
+    n_local = dest_l.shape[0]
+    # slot of each row within its destination bucket
+    onehot = jax.nn.one_hot(dest_l, n_shards, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)[
+        jnp.arange(n_local), dest_l]
+    keep = pos < per
+    # rows this source shard wanted to send to each destination but
+    # could not fit; global per-destination overflow is the psum
+    dropped = (onehot * (~keep)[:, None].astype(jnp.int32)).sum(axis=0)
+    overflow = jax.lax.psum(dropped, axis)
+    # overflowing rows write to a scratch column (per) that is sliced
+    # off -- writing them to per-1 would clobber the legitimate last
+    # slot and silently drop one MORE tuple than reported
+    slot = jnp.where(keep, pos, per)
+    out_valid = jnp.zeros((n_shards, per + 1), jnp.bool_)
+    out_valid = out_valid.at[dest_l, slot].set(keep)[:, :per]
+    outs = []
+    for v in vals:
+        buf = jnp.zeros((n_shards, per + 1), v.dtype)
+        buf = buf.at[dest_l, slot].set(
+            jnp.where(keep, v, 0))[:, :per]
+        outs.append(jax.lax.all_to_all(buf, axis, 0, 0, tiled=False))
+    vr = jax.lax.all_to_all(out_valid, axis, 0, 0, tiled=False)
+    return (tuple(o.reshape(-1) for o in outs), vr.reshape(-1), overflow)
+
+
 def resegment(mesh: Mesh, axis: str, cols: Dict[str, jax.Array],
               dest: jax.Array, capacity: int
               ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
@@ -37,33 +73,9 @@ def resegment(mesh: Mesh, axis: str, cols: Dict[str, jax.Array],
     n_shards = mesh.shape[axis]
 
     def local(dest_l, *vals):
-        # dest_l: (n_local,) destination shard per local row
-        n_local = dest_l.shape[0]
-        per = capacity // n_shards
-        # slot of each row within its destination bucket
-        onehot = jax.nn.one_hot(dest_l, n_shards, dtype=jnp.int32)
-        pos = (jnp.cumsum(onehot, axis=0) - onehot)[
-            jnp.arange(n_local), dest_l]
-        keep = pos < per
-        # rows this source shard wanted to send to each destination but
-        # could not fit; global per-destination overflow is the psum
-        dropped = (onehot * (~keep)[:, None].astype(jnp.int32)).sum(axis=0)
-        overflow = jax.lax.psum(dropped, axis)
-        # overflowing rows write to a scratch column (per) that is sliced
-        # off -- writing them to per-1 would clobber the legitimate last
-        # slot and silently drop one MORE tuple than reported
-        slot = jnp.where(keep, pos, per)
-        out_valid = jnp.zeros((n_shards, per + 1), jnp.bool_)
-        out_valid = out_valid.at[dest_l, slot].set(keep)[:, :per]
-        outs = []
-        for v in vals:
-            buf = jnp.zeros((n_shards, per + 1), v.dtype)
-            buf = buf.at[dest_l, slot].set(
-                jnp.where(keep, v, 0))[:, :per]
-            outs.append(jax.lax.all_to_all(buf, axis, 0, 0, tiled=False))
-        vr = jax.lax.all_to_all(out_valid, axis, 0, 0, tiled=False)
-        return tuple(o.reshape(-1) for o in outs) + (vr.reshape(-1),
-                                                     overflow)
+        outs, vr, overflow = resegment_local(
+            axis, n_shards, capacity // n_shards, dest_l, vals)
+        return outs + (vr, overflow)
 
     names = list(cols)
     fn = shard_map(local, mesh=mesh,

@@ -275,6 +275,46 @@ def wos_scan_host(db: VerticaDB, plan, need: Sequence[str], as_of: int
     return cols, np.concatenate(valids), ring
 
 
+def snapshot_scan_device(db: VerticaDB, plan, need: Sequence[str],
+                         as_of: int, stats
+                         ) -> Optional[Tuple[Dict[str, jax.Array],
+                                             np.ndarray]]:
+    """Device-side ROS snapshot for the segmented slab build: the decoded
+    blocks of every container behind ``plan.sources`` are concatenated
+    into one flat DEVICE array per column -- the columns never round-trip
+    through the host (engine/segmented.py hashes, partitions and
+    resegments them with on-device twins).  Only the visibility mask
+    comes back as numpy: it is computed from host-side delete bitmaps and
+    epoch arrays anyway, and uploading one bool array is the cheap
+    direction.  No SMA pruning here -- the slab caches ALL visible rows;
+    per-query predicate pruning happens at slab-block granularity
+    downstream."""
+    need = sorted(set(need))
+    cache = getattr(db, "block_cache", None)
+    col_parts: Dict[str, List[jax.Array]] = {name: [] for name in need}
+    valid_parts: List[np.ndarray] = []
+    for host, owner in plan.sources:
+        store = db.nodes[host].stores[owner]
+        for c in store.containers:
+            if not need:
+                continue
+            stats.containers_scanned += 1
+            for name in need:
+                col_parts[name].append(cached_decoded(cache, c, name))
+            counts = c.smas[need[0]].counts
+            eff = min(as_of, _container_ceiling(store, c))
+            valid_parts.append(_valid_blocks_np(store, c, eff, counts))
+    if not valid_parts:
+        return None
+    if len(valid_parts) == 1:
+        cols = {n: p[0].reshape(-1) for n, p in col_parts.items()}
+    else:
+        cols = {n: jnp.concatenate([b.reshape(-1) for b in p])
+                for n, p in col_parts.items()}
+    valid = np.concatenate([v.reshape(-1) for v in valid_parts])
+    return cols, valid
+
+
 def snapshot_scan_host(db: VerticaDB, plan, need: Sequence[str],
                        as_of: int, stats, *, include_wos: bool = True
                        ) -> Optional[Tuple[Dict[str, np.ndarray],

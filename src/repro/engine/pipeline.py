@@ -236,8 +236,7 @@ def _execute_attempt(db: VerticaDB, q: LogicalQuery, plan, as_of: int,
                 return _finish(res)
 
         # --- RLE-direct fast path: aggregate on encoded data, zero decode ---
-        if plan.groupby_algorithm == "rle" and not q.joins \
-                and q.predicate is None:
+        if rle_direct_eligible(q, plan):
             res = _rle_groupby(db, q, plan, as_of)
             if res is not None:
                 return _finish(res)
@@ -397,6 +396,15 @@ def _combine_sips(sips: List[Callable]) -> Optional[Callable]:
 # ---------------------------------------------------------------------------
 # RLE-direct paths (single-column group keys on encoded data)
 # ---------------------------------------------------------------------------
+
+def rle_direct_eligible(q: LogicalQuery, plan) -> bool:
+    """Shape test for the RLE-direct GroupBy route, shared by the
+    single-node dispatch below and the segmented executor (which routes
+    the same queries per node and merges, instead of slabbing 2M decoded
+    rows across the mesh only to count runs it already had encoded)."""
+    return plan.groupby_algorithm == "rle" and not q.joins \
+        and q.predicate is None
+
 
 def _rle_scalar_count(db: VerticaDB, q: LogicalQuery, plan, as_of: int
                       ) -> Optional[Dict[str, np.ndarray]]:

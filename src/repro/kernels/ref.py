@@ -44,6 +44,47 @@ def rle_grouped_agg_ref(run_values: jax.Array, run_lengths: jax.Array,
     return jnp.stack([cnt, s, mn, mx], axis=0)
 
 
+def seg_preagg_ref(keys: jax.Array, valid: jax.Array, values,
+                   domain: int, aggs) -> dict:
+    """Oracle for the segmented executor's packed-domain pre-aggregation
+    scatter (kernels/seg_preagg.py): same contract as
+    ``operators.groupby_dense`` -- keys clip into [0, domain) (negative
+    keys merge into group 0 exactly like the scatter path), counts
+    accumulate in int32, int sums in int32 (wrapping, exact), float sums
+    in f32 (summation-order tolerance), min/max start from the dtype's
+    sentinels.  ``aggs`` is the
+    (out_name, in_col, kind) tuple the engine passes; ``values`` maps
+    column name -> (n,) array."""
+    k = jnp.clip(keys.astype(jnp.int32), 0, domain - 1)
+    vi = valid.astype(jnp.int32)
+    counts = jnp.zeros(domain, jnp.int32).at[k].add(vi)
+    out = {"group_count": counts}
+    for name, col, kind in aggs:
+        if kind == "count":
+            out[name] = counts
+            continue
+        v = values[col]
+        v = v.astype(jnp.float32) if v.dtype.kind == "f" \
+            else v.astype(jnp.int32)
+        if kind in ("sum", "avg"):
+            acc = jnp.zeros(domain, v.dtype).at[k].add(
+                jnp.where(valid, v, 0))
+            if kind == "avg":
+                acc = acc / jnp.maximum(counts, 1)
+        elif kind == "min":
+            sent = jnp.iinfo(v.dtype).max if v.dtype.kind == "i" \
+                else jnp.inf
+            acc = jnp.full(domain, sent, v.dtype).at[k].min(
+                jnp.where(valid, v, sent))
+        else:
+            sent = jnp.iinfo(v.dtype).min if v.dtype.kind == "i" \
+                else -jnp.inf
+            acc = jnp.full(domain, sent, v.dtype).at[k].max(
+                jnp.where(valid, v, sent))
+        out[name] = acc
+    return out
+
+
 def onehot_groupby_ref(keys: jax.Array, values: jax.Array,
                        domain: int) -> jax.Array:
     """Per-block dense partial GroupBy (count+sum) via one-hot contraction.

@@ -1,0 +1,173 @@
+"""Packed-domain pre-aggregation scatter as a Pallas grid kernel.
+
+The segmented executor's shard-local GroupBy (engine/segmented.py) packs
+the group keys into one dense domain and scatters each aggregate into a
+per-shard partial vector -- ``operators.groupby_dense``.  On TPU the XLA
+scatter serializes; this kernel re-expresses it as the one-hot /
+reduction shape the MXU+VPU like (same trick as kernels/hash_groupby.py),
+streaming row blocks through VMEM and accumulating every aggregate's
+(1, domain) partial in place across grid steps.
+
+Contract: matches ``operators.groupby_dense`` under the default 32-bit
+runtime -- keys clip into [0, domain) (negative keys merge into group 0),
+counts and int sums accumulate in int32 (wrapping, exact), float sums in
+f32 (to summation-order tolerance), min/max start from the dtype's
+sentinels.  The oracle is
+``kernels.ref.seg_preagg_ref``; ``tests/test_kernels_seg_preagg.py``
+checks kernel == oracle == groupby_dense.
+
+Dispatch (``seg_preagg``): the kernel runs when compiled for TPU (or
+forced via ``REPRO_SEG_PREAGG=pallas``, interpreted elsewhere) and the
+packed domain fits the VMEM budget; every other shape keeps the XLA
+scatter, so CPU differential tests exercise byte-identical code by
+default.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_BLOCK = 256             # rows per grid step
+_DOMAIN_CAP = 1024       # (B, domain) one-hot must sit in VMEM
+
+
+def _use_kernel(domain: int, kinds: Tuple[str, ...]) -> bool:
+    """Kernel eligibility: small packed domain, plain aggregates, 32-bit
+    runtime, and a backend that wants it (TPU, or the env override)."""
+    if domain > _DOMAIN_CAP or jax.config.jax_enable_x64:
+        return False
+    if not all(k in ("count", "sum", "min", "max") for k in kinds):
+        return False
+    if jax.default_backend() == "tpu":
+        return True
+    return os.environ.get("REPRO_SEG_PREAGG", "") == "pallas"
+
+
+def _sentinel(dt, hi: bool):
+    if jnp.issubdtype(dt, jnp.integer):
+        info = jnp.iinfo(dt)
+        return info.max if hi else info.min
+    return jnp.inf if hi else -jnp.inf
+
+
+def _make_kernel(domain: int, kinds: Tuple[str, ...], block: int):
+    n_vals = len(kinds)
+
+    def kernel(*refs):
+        keys_ref, mask_ref = refs[0], refs[1]
+        vrefs = refs[2:2 + n_vals]
+        cref = refs[2 + n_vals]
+        orefs = refs[3 + n_vals:]
+        i = pl.program_id(0)
+
+        def accumulate(oref, part, comb):
+            @pl.when(i == 0)
+            def _init():
+                oref[0] = part
+
+            @pl.when(i > 0)
+            def _fold():
+                oref[0] = comb(oref[0], part)
+
+        k = jnp.clip(keys_ref[0], 0, domain - 1)
+        m = mask_ref[0] != 0
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block, domain), 1)
+        oh = (k[:, None] == cols) & m[:, None]          # (B, domain)
+        cnt = oh.astype(jnp.int32).sum(axis=0)
+        accumulate(cref, cnt, jnp.add)
+        for j, kind in enumerate(kinds):
+            if kind == "count":
+                accumulate(orefs[j], cnt, jnp.add)
+                continue
+            v = vrefs[j][0]
+            if kind == "sum":
+                part = jnp.where(oh, v[:, None],
+                                 jnp.zeros((), v.dtype)).sum(axis=0)
+                accumulate(orefs[j], part, jnp.add)
+            elif kind == "min":
+                sent = _sentinel(v.dtype, True)
+                part = jnp.where(oh, v[:, None], sent).min(axis=0)
+                accumulate(orefs[j], part, jnp.minimum)
+            else:
+                sent = _sentinel(v.dtype, False)
+                part = jnp.where(oh, v[:, None], sent).max(axis=0)
+                accumulate(orefs[j], part, jnp.maximum)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("domain", "kinds",
+                                             "interpret"))
+def _preagg_call(keys, mask, vals, domain: int, kinds: Tuple[str, ...],
+                 interpret: bool):
+    """keys/mask (n,) padded to a _BLOCK multiple by the caller; vals is
+    one prepared (n,) array per aggregate, aligned with ``kinds``."""
+    n = keys.shape[0]
+    nb = n // _BLOCK
+    keys2 = keys.reshape(nb, _BLOCK)
+    mask2 = mask.reshape(nb, _BLOCK)
+    vals2 = tuple(v.reshape(nb, _BLOCK) for v in vals)
+    row_spec = pl.BlockSpec((1, _BLOCK), lambda i: (i, 0))
+    acc_spec = pl.BlockSpec((1, domain), lambda i: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((1, domain), jnp.int32)]
+    for kind, v in zip(kinds, vals2):
+        dt = jnp.int32 if kind == "count" else v.dtype
+        out_shape.append(jax.ShapeDtypeStruct((1, domain), dt))
+    outs = pl.pallas_call(
+        _make_kernel(domain, kinds, _BLOCK),
+        grid=(nb,),
+        in_specs=[row_spec] * (2 + len(vals2)),
+        out_specs=[acc_spec] * len(out_shape),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(keys2, mask2, *vals2)
+    return tuple(o.reshape(domain) for o in outs)
+
+
+def seg_preagg_pallas(keys, valid, values: Dict[str, jax.Array],
+                      domain: int, aggs, *, interpret: bool = True):
+    """Run the kernel unconditionally (tests drive this in interpret
+    mode); same signature and outputs as ``operators.groupby_dense``."""
+    kinds = tuple(a[2] for a in aggs)
+    n = keys.shape[0]
+    pad = (-n) % _BLOCK
+    k = jnp.pad(keys.astype(jnp.int32), (0, pad))
+    m = jnp.pad(valid.astype(jnp.int32), (0, pad))
+    vals = []
+    for _name, col, kind in aggs:
+        if kind == "count":
+            vals.append(k)          # placeholder, never read
+            continue
+        v = values[col]
+        v = v.astype(jnp.float32) if v.dtype.kind == "f" \
+            else v.astype(jnp.int32)
+        vals.append(jnp.pad(v, (0, pad)))
+    outs = _preagg_call(k, m, tuple(vals), int(domain), kinds,
+                        bool(interpret))
+    res = {"group_count": outs[0]}
+    for (name, _col, _kind), o in zip(aggs, outs[1:]):
+        res[name] = o
+    return res
+
+
+def seg_preagg(keys, valid, values: Dict[str, jax.Array], domain: int,
+               aggs, *, force_ref: bool = False):
+    """Drop-in for ``operators.groupby_dense`` inside the segmented
+    executor's fused shard program: Pallas kernel when eligible
+    (``_use_kernel``), XLA scatter otherwise, jnp oracle on demand."""
+    if force_ref:
+        return ref.seg_preagg_ref(keys, valid, values, domain, aggs)
+    kinds = tuple(a[2] for a in aggs)
+    if _use_kernel(int(domain), kinds):
+        return seg_preagg_pallas(keys, valid, values, int(domain), aggs,
+                                 interpret=jax.default_backend() != "tpu")
+    from ..engine import operators as ops
+    return ops.groupby_dense(keys.astype(jnp.int32), valid, values,
+                             int(domain), aggs)

@@ -508,3 +508,102 @@ def test_resegment_overflow_is_reported():
     assert int(np.asarray(overflow2).sum()) == 0
     kept2 = np.asarray(out2["k"])[np.asarray(valid2)]
     assert sorted(kept2.tolist()) == keys.tolist()
+
+
+# ---------------------------------------------------------------------------
+# empty-snapshot scans: the slab build must degrade, never raise
+# ---------------------------------------------------------------------------
+
+def test_segmented_all_rows_deleted():
+    """Deleting every fact row empties the snapshot: the slab build has
+    zero visible rows (``v.min()`` on an empty partition used to raise)
+    and the query must still answer -- falling back to the single-node
+    shape of an empty aggregate, identically on both paths."""
+    db = make_db(seed=51)
+    t = db.begin()
+    db.delete(t, "sales", lambda r: r["sale_id"] >= 0)
+    db.commit(t)
+    qb = (db.query("sales").where(col("qty") > 0)
+          .group_by("suppkey").agg(n=("*", "count"), s=("qty", "sum")))
+    ref, out, _stats = run_both(db, qb)
+    assert len(ref["n"]) == 0
+    assert_match(ref, out, ordered=False, label="all-deleted")
+
+
+def test_segmented_wos_only_snapshot():
+    """A projection whose every row still sits in the WOS (no moveout
+    yet) has no ROS slab at all: the segmented path must run off the
+    trickle buffers alone and match single-node."""
+    db = make_db(seed=52)
+    rng = np.random.default_rng(9)
+    t = db.begin()
+    db.delete(t, "sales", lambda r: r["sale_id"] >= 0)
+    db.commit(t)
+    _trickle(db, rng, n=120)                # WOS-only visible rows
+    qb = (db.query("sales").group_by("suppkey")
+          .agg(n=("*", "count"), s=("qty", "sum"), a=("price", "avg")))
+    ref, out, stats = run_both(db, qb)
+    assert len(ref["n"]) > 0
+    assert stats.segmented, stats.seg_slab
+    assert "+wos" in stats.seg_slab, stats.seg_slab
+    assert_match(ref, out, ordered=False, label="wos-only")
+
+
+def test_segmented_pruned_to_empty():
+    """A predicate outside every block's SMA range prunes ALL slab
+    blocks: the all-pads program must yield exactly the empty result the
+    predicate implies, not raise or mis-shape."""
+    db = make_db(seed=53)
+    qb = (db.query("sales").where(col("day") >= 100_000)
+          .group_by("suppkey").agg(n=("*", "count")))
+    ref, out, stats = run_both(db, qb)
+    assert len(ref["n"]) == 0
+    assert stats.segmented
+    assert stats.blocks_total > 0
+    assert stats.blocks_pruned == stats.blocks_total
+    assert_match(ref, out, ordered=False, label="pruned-empty")
+
+
+def test_segmented_pruning_differential(star_db):
+    """Selective range predicates drive the slab-block pruner; results
+    must stay exact and the pruned-block telemetry must move."""
+    db = star_db
+    qb = (db.query("sales").where((col("day") >= 40) & (col("day") < 80))
+          .group_by("suppkey").agg(n=("*", "count"), s=("qty", "sum")))
+    ref, out, stats = run_both(db, qb)
+    assert stats.segmented
+    assert stats.blocks_total > 0
+    assert stats.blocks_pruned < stats.blocks_total
+    assert_match(ref, out, ordered=False, label="pruned-range")
+
+
+# ---------------------------------------------------------------------------
+# shard-index-column cache: bounded, oldest-first eviction
+# ---------------------------------------------------------------------------
+
+def test_shard_index_cache_retention(star_db):
+    from repro.engine import segmented as seg
+
+    db = star_db
+    db.attach_mesh()
+    try:
+        mesh, axis = db.mesh, db.mesh_axis
+        n_shards = int(mesh.shape[axis])
+        seg._SHARD_IDX_CACHE.clear()
+        first = seg._shard_index_col(mesh, axis, n_shards, 8)
+        # warm re-request returns the SAME device array (no rebuild)
+        assert seg._shard_index_col(mesh, axis, n_shards, 8) is first
+        for w in range(2, 2 + seg._SHARD_IDX_CAP + 10):
+            seg._shard_index_col(mesh, axis, n_shards, 8 * w)
+        # bounded: never grows past the cap
+        assert len(seg._SHARD_IDX_CACHE) <= seg._SHARD_IDX_CAP
+        # oldest-first: the width-8 entry fell out, the newest survive
+        # (a wholesale clear() would have left exactly one entry)
+        sig = seg._mesh_sig(mesh, axis)
+        assert (sig, 8) not in seg._SHARD_IDX_CACHE
+        last_w = 8 * (2 + seg._SHARD_IDX_CAP + 9)
+        newest = seg._SHARD_IDX_CACHE[(sig, last_w)]
+        assert seg._shard_index_col(mesh, axis, n_shards, last_w) is newest
+        assert len(seg._SHARD_IDX_CACHE) > 1
+    finally:
+        db.detach_mesh()
