@@ -4,13 +4,20 @@ N clients drive the serving front door (engine/serving.py) in a closed
 loop -- each client submits its next query only after its previous one
 completed -- so the latency a ticket observes includes real queue wait.
 The same per-client schedules then run serially, one query at a time
-through the ordinary pipeline, as the baseline the shared-scan path must
+through the ordinary pipeline, as the baseline the overlapped path must
 beat: a coalesced group assembles its (cache-resident) scan once where
-serial execution assembles it once PER QUERY.
+serial execution assembles it once PER QUERY, and the pipelined
+dispatch/drain core overlaps one unit's device compute with the next
+unit's host-side planning and scan assembly.
 
-Reports p50/p95/p99 latency, throughput, shared-scan hit rate, and the
-speedup over serial; benchmarks/run.py writes the result to repo-root
-BENCH_serving.json so tail latency is tracked PR-over-PR
+A second phase measures interactive isolation: the p99 of a fixed
+interactive probe, unloaded and then under a batch flood bounded by the
+batch bulkhead -- the ratio is the paper's "web-scale traffic must not
+starve the dashboard" claim in one number.
+
+Reports p50/p95/p99 latency, throughput, shared-scan hit rate, speedup
+over serial, and the flood ratio; benchmarks/run.py writes the result to
+repo-root BENCH_serving.json so tail latency is tracked PR-over-PR
 (scripts/verify.sh gates on regressions).
 """
 from __future__ import annotations
@@ -159,6 +166,35 @@ def run(report):
                 waits.append(t.stats.queue_wait_s * 1000)
     serving_s = time.time() - t0
 
+    # --- interactive isolation: fixed probe, unloaded vs batch flood ---
+    flood_n = 24 if quick else 48
+    n_probe = 12 if quick else 24
+    probe = mix[0]
+    svc2 = db.serve(queue_depth=flood_n + 8, max_concurrent=4,
+                    max_coalesce=8,
+                    max_in_flight={"interactive": 4, "batch": 2})
+    inter = svc2.session("interactive")
+    unloaded_ms: List[float] = []
+    for _ in range(n_probe):
+        t1 = time.time()
+        inter.submit(probe).result()
+        unloaded_ms.append((time.time() - t1) * 1000)
+    batch_sess = svc2.session("batch")
+    flood = [batch_sess.submit(mix[int(rng.integers(0, len(mix)))])
+             for _ in range(flood_n)]
+    flooded_ms: List[float] = []
+    for _ in range(n_probe):
+        svc2.step()            # the flood occupies the service between
+        svc2.step()            # probes: batch units dispatch + park
+        t1 = time.time()
+        inter.submit(probe).result()
+        flooded_ms.append((time.time() - t1) * 1000)
+    svc2.drain()
+    assert all(t.done for t in flood)
+    p99_unloaded = float(np.percentile(np.asarray(unloaded_ms), 99))
+    p99_flood = float(np.percentile(np.asarray(flooded_ms), 99))
+    flood_ratio = p99_flood / p99_unloaded if p99_unloaded else 0.0
+
     p50, p95, p99 = _percentiles(lat_ms)
     sp50, sp95, sp99 = _percentiles(serial_lat)
     n_ok = len(lat_ms)
@@ -184,6 +220,14 @@ def run(report):
         "shared_scans": svc.stats.shared_scans,
         "coalesced_max": svc.stats.coalesced_max,
         "batch_boosts": svc.stats.batch_boosts,
+        "async_units": svc.stats.async_units,
+        "deduped": svc.stats.deduped,
+        "device_transfers": svc.stats.device_transfers,
+        "interactive_p99_unloaded_ms": round(p99_unloaded, 3),
+        "interactive_p99_flood_ms": round(p99_flood, 3),
+        "interactive_p99_flood_ratio": round(flood_ratio, 3),
+        "flood_batch_peak_in_flight": svc2.stats.peak_in_flight.get(
+            "batch", 0),
         "peak_reserved_mb": round(
             db.block_cache.stats.peak_reserved_bytes / 2**20, 1),
     }
@@ -193,8 +237,11 @@ def run(report):
           f"{result['serial_qps']} qps "
           f"(speedup {result['speedup_vs_serial']}x) | "
           f"shared-scan hit rate {result['shared_scan_hit_rate']:.0%} "
-          f"(max group {svc.stats.coalesced_max})")
+          f"(max group {svc.stats.coalesced_max}) | "
+          f"flood p99 ratio {flood_ratio:.2f}x "
+          f"({p99_flood:.1f}ms vs {p99_unloaded:.1f}ms unloaded)")
     assert svc.stats.shared_hit_rate() > 0, "no query rode a shared scan"
+    assert svc.stats.async_units > 0, "nothing dispatched asynchronously"
     assert db.epochs.n_pinned() == 0, "serving leaked an epoch pin"
     report("serving/closed_loop", result)
 

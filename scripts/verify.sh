@@ -60,6 +60,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     timeout "$T_CHAOS" python -m pytest -q -x -p no:cacheprovider \
     tests/test_fault_chaos.py
 
+echo "== async serving tier: pipelined dispatch/drain on the 8-device mesh =="
+# seeded 50-ticket flood, bulkhead/rate-limit/cost-model properties, and
+# the crash-during-drain failover matrix (DESIGN.md §18) -- all schedules
+# deterministic (VirtualClock + fixed seeds)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    timeout "$T_CHAOS" python -m pytest -q -x -p no:cacheprovider \
+    tests/test_serving_async.py
+
 echo "== quick cstore benchmark =="
 PREV=""
 if [ -f BENCH_cstore.json ]; then
@@ -125,16 +133,31 @@ import sys
 
 prev_path, tol = sys.argv[1], float(sys.argv[2])
 cur = json.load(open("BENCH_serving.json"))
-# the serving tier's hard requirements: tail latency reported, and the
+# the serving tier's hard requirements: tail latency reported, the
 # shared-scan path actually coalescing (a hit rate of 0 means every
-# query ran solo -- the subsystem's point is gone)
+# query ran solo -- the subsystem's point is gone), and the pipelined
+# core actually parking flights (async_units of 0 means every unit ran
+# synchronously -- DESIGN.md §18's point is gone)
 assert cur.get("p99_ms"), "serving bench missing p99 latency"
 assert cur.get("shared_scan_hit_rate", 0) > 0, \
     "serving bench: shared-scan hit rate is 0"
+assert cur.get("async_units", 0) > 0, \
+    "serving bench: nothing dispatched asynchronously"
 print(f"[verify] serving p50 {cur['p50_ms']:.1f}ms "
       f"p99 {cur['p99_ms']:.1f}ms, {cur['throughput_qps']} qps, "
       f"shared-scan hit rate {cur['shared_scan_hit_rate']:.0%}, "
       f"speedup vs serial {cur['speedup_vs_serial']:.2f}x")
+# interactive isolation gate: probe p99 under a bulkheaded batch flood
+# must stay within FLOOD_RATIO_MAX x its unloaded p99
+import os
+fr = cur.get("interactive_p99_flood_ratio")
+fr_max = float(os.environ.get("FLOOD_RATIO_MAX", "1.5"))
+if fr is not None:
+    print(f"[verify] interactive p99 flood ratio {fr:.2f}x "
+          f"(max {fr_max:.2f}x)")
+    if fr > fr_max:
+        sys.exit(f"[verify] ISOLATION REGRESSION: interactive p99 under "
+                 f"batch flood is {fr:.2f}x unloaded (> {fr_max:.2f}x)")
 if not prev_path:
     print("[verify] no previous BENCH_serving.json; quick baseline kept")
     sys.exit(0)

@@ -44,6 +44,7 @@ KIND_ENCODED = "encoded"                  # dict of device payload arrays
 KIND_DECODED = "decoded"                  # (n_blocks, block_rows) device array
 KIND_SEG = "segmented"                    # per-shard partitioned scan slabs
 KIND_WOS = "wos_slab"                     # per-shard device WOS buffers
+KIND_UNION = "union_scan"                 # serving-tier assembled union scans
 
 
 @dataclasses.dataclass
@@ -139,6 +140,16 @@ class BlockCache:
     # admitted queries may open at once against the same byte budget the
     # LRU answers to, which is the paper's "resource manager sizes
     # concurrent query budgets against physical memory" (§7).
+    #
+    # Under the pipelined serving core a reservation is held from device
+    # DISPATCH until the drain stage harvests the unit's futures, so many
+    # units' reservations overlap; ``take`` hands out a Reservation token
+    # whose ``release`` is idempotent -- dispatch-crash, drain-crash and
+    # normal-completion paths may all try to release, exactly one wins.
+
+    def take(self, nbytes: int) -> "Reservation":
+        self.reserve(nbytes)
+        return Reservation(self, int(nbytes))
 
     def reserve(self, nbytes: int) -> int:
         self.stats.reserved_bytes += int(nbytes)
@@ -214,3 +225,21 @@ class BlockCache:
 
     def keys(self):
         return list(self._entries.keys())
+
+
+class Reservation:
+    """A live working-set reservation against one BlockCache budget.
+    ``release()`` returns the bytes exactly once no matter how many
+    failure/completion paths call it."""
+
+    __slots__ = ("cache", "nbytes", "live")
+
+    def __init__(self, cache: "BlockCache", nbytes: int):
+        self.cache = cache
+        self.nbytes = nbytes
+        self.live = True
+
+    def release(self) -> None:
+        if self.live:
+            self.live = False
+            self.cache.release(self.nbytes)

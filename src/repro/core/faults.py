@@ -51,9 +51,13 @@ import numpy as np
 # registry for docs and chaos sweeps (tests iterate this so a new point
 # cannot be forgotten by the chaos tier).  The serving.* points land in
 # engine/serving.py: ``serving.admit`` fires per admission decision
-# (before anything is pinned or queued), ``serving.shared_scan`` fires
-# once per coalesced scan dispatch (a crash there exercises multi-query
-# failover).
+# (before anything is pinned or queued), ``serving.rate_limit`` per
+# token-bucket check (also pre-pin), ``serving.shared_scan`` once per
+# coalesced scan attempt (a crash there exercises multi-query failover),
+# ``serving.dispatch`` once per dispatch unit as its device programs
+# launch, and ``serving.drain`` once per unit as its parked futures are
+# harvested (a crash there exercises the mid-flight drain failover, a
+# Hang there simulates a slow query stalling the drain stage).
 INJECTION_POINTS = (
     "commit.apply",
     "tuple_mover.moveout",
@@ -65,7 +69,10 @@ INJECTION_POINTS = (
     "exchange.resegment",
     "exchange.broadcast",
     "serving.admit",
+    "serving.rate_limit",
     "serving.shared_scan",
+    "serving.dispatch",
+    "serving.drain",
 )
 
 
@@ -154,13 +161,23 @@ class Hang:
     """Stall the attempt (does not raise): the per-attempt timeout in
     :func:`with_retries` converts the slow attempt into a FaultTimeout,
     which retries like a transient -- a hung peer must fail the attempt,
-    not wedge the query."""
+    not wedge the query.
+
+    When the firing context carries a ``clock`` (the serving layer passes
+    its scheduler clock at ``serving.dispatch``/``serving.drain``), the
+    hang sleeps on THAT clock -- under a virtual clock the stall advances
+    simulated time with no wall-clock sleep, so slow-query schedules
+    replay deterministically (engine/serving.VirtualClock)."""
 
     def __init__(self, seconds: float = 0.05):
         self.seconds = seconds
 
     def __call__(self, db, point: str, ctx: dict, rng) -> None:
-        time.sleep(self.seconds)
+        clock = ctx.get("clock")
+        if clock is not None:
+            clock.sleep(self.seconds)
+        else:
+            time.sleep(self.seconds)
 
     def __repr__(self):
         return f"Hang({self.seconds})"

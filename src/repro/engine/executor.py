@@ -524,12 +524,20 @@ def _shape_fused_result(q, res, algo: str, domain: int,
     return out
 
 
-def execute_fused(db: VerticaDB, q, plan, as_of: int,
-                  stats) -> Optional[Dict[str, np.ndarray]]:
-    """Run an aggregate query as one cached fused program.  Returns None
-    when the query shape is outside the fused subset (WOS rows pending,
-    no aggregation, or composite keys without static SMA domains) -- the
-    caller falls back to the general pipeline."""
+def execute_fused_deferred(db: VerticaDB, q, plan, as_of: int, stats
+                           ) -> Optional[Tuple[Dict[str, jax.Array],
+                                               Callable]]:
+    """Futures-returning twin of :func:`execute_fused`: dispatch the
+    cached fused program and return ``(device_result, finish)`` WITHOUT
+    any host synchronization -- jax dispatch is async, so the caller
+    (the serving layer's pipelined dispatch stage, engine/serving.py)
+    can park the result and immediately dispatch the next query; device
+    compute overlaps the host-side planning/admission of its successors.
+    ``finish(host_result)`` does the host-side shaping on the
+    already-materialized arrays (one batched transfer, done by the drain
+    stage) and may return None on sort-cap overflow, in which case the
+    caller falls back to the general pipeline exactly as ``execute``
+    would.  Returns None when the shape is outside the fused subset."""
     if _stores_have_wos(db, plan):
         return None   # WOS rows need the unencoded side-scan
     params = fused_plan_params(q, plan, stats)
@@ -566,25 +574,49 @@ def execute_fused(db: VerticaDB, q, plan, as_of: int,
                                   tuple(q.aggs)))
     stats.plan_cache = "hit" if hit else "miss"
     res = fused(scan.columns, scan.valid, tuple(builds))
-    return _shape_fused_result(q, res, algo, domain, domains, stats,
-                               sigs=(sig,))
+
+    def finish(host_res) -> Optional[Dict[str, np.ndarray]]:
+        return _shape_fused_result(q, host_res, algo, domain, domains,
+                                   stats, sigs=(sig,))
+
+    return res, finish
 
 
-def execute_shared_fused(db: VerticaDB, q, plan, cols: Dict[str, jax.Array],
-                         valid: jax.Array, stats
-                         ) -> Optional[Dict[str, np.ndarray]]:
-    """Per-query mask->aggregate stage of a serving shared scan
-    (engine/serving.py): the coalesced batch's ONE unpruned scan is
-    already device-resident; this runs the query's own predicate +
-    groupby over it as a plan-cached jitted program.  The predicate is
-    evaluated INSIDE the program -- a shared scan cannot push any single
-    query's predicate down -- so the cache key carries a ``"shared"``
-    prefix to keep these programs distinct from the dedicated fused path
-    (same exec signature, different predicate placement).  Algorithm and
-    domain choices come from the same ``fused_plan_params`` the dedicated
-    path uses, which is what makes results byte-identical.  Returns None
-    outside the fused subset or on sort-cap overflow -- the caller falls
-    back to the general (untraced) operators, exactly as pipeline does."""
+def execute_fused(db: VerticaDB, q, plan, as_of: int,
+                  stats) -> Optional[Dict[str, np.ndarray]]:
+    """Run an aggregate query as one cached fused program, materializing
+    the result immediately (the synchronous wrapper around
+    :func:`execute_fused_deferred`).  Returns None when the query shape
+    is outside the fused subset (WOS rows pending, no aggregation, or
+    composite keys without static SMA domains) or on sort-cap overflow
+    -- the caller falls back to the general pipeline."""
+    d = execute_fused_deferred(db, q, plan, as_of, stats)
+    if d is None:
+        return None
+    res, finish = d
+    return finish(jax.device_get(res))
+
+
+def execute_shared_fused_deferred(db: VerticaDB, q, plan,
+                                  cols: Dict[str, jax.Array],
+                                  valid: jax.Array, stats
+                                  ) -> Optional[Tuple[Dict[str, jax.Array],
+                                                      Callable]]:
+    """Futures-returning per-query mask->aggregate stage of a serving
+    shared scan (engine/serving.py): the coalesced batch's ONE unpruned
+    scan is already device-resident; this dispatches the query's own
+    predicate + groupby over it as a plan-cached jitted program and
+    returns ``(device_result, finish)`` with no host sync -- the drain
+    stage harvests every member of the group in one batched transfer.
+    The predicate is evaluated INSIDE the program -- a shared scan cannot
+    push any single query's predicate down -- so the cache key carries a
+    ``"shared"`` prefix to keep these programs distinct from the
+    dedicated fused path (same exec signature, different predicate
+    placement).  Algorithm and domain choices come from the same
+    ``fused_plan_params`` the dedicated path uses, which is what makes
+    results byte-identical.  Returns None outside the fused subset;
+    ``finish`` returns None on sort-cap overflow -- the caller falls back
+    to the general (untraced) operators, exactly as pipeline does."""
     if q.joins:
         return None   # shared scans coalesce single-table queries only
     params = fused_plan_params(q, plan, stats)
@@ -601,7 +633,25 @@ def execute_shared_fused(db: VerticaDB, q, plan, cols: Dict[str, jax.Array],
                                   tuple(q.aggs)))
     stats.plan_cache = "hit" if hit else "miss"
     res = fused(cols, valid, ())
-    # overflow poisons BOTH signatures: the dedicated path would overflow
-    # on the same data, so a later solo dispatch shouldn't re-try either
-    return _shape_fused_result(q, res, algo, domain, domains, stats,
-                               sigs=(sig, base_sig))
+
+    def finish(host_res) -> Optional[Dict[str, np.ndarray]]:
+        # overflow poisons BOTH signatures: the dedicated path would
+        # overflow on the same data, so a later solo dispatch shouldn't
+        # re-try either
+        return _shape_fused_result(q, host_res, algo, domain, domains,
+                                   stats, sigs=(sig, base_sig))
+
+    return res, finish
+
+
+def execute_shared_fused(db: VerticaDB, q, plan, cols: Dict[str, jax.Array],
+                         valid: jax.Array, stats
+                         ) -> Optional[Dict[str, np.ndarray]]:
+    """Synchronous wrapper around
+    :func:`execute_shared_fused_deferred` (kept for solo fallbacks and
+    direct callers): dispatch, materialize, shape."""
+    d = execute_shared_fused_deferred(db, q, plan, cols, valid, stats)
+    if d is None:
+        return None
+    res, finish = d
+    return finish(jax.device_get(res))

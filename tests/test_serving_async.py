@@ -1,0 +1,399 @@
+"""Async overlapped serving tests (engine/serving.py pipelined core):
+dispatch/drain byte-identity, bulkhead invariants, token-bucket rate
+limiting, SMA cost-model admission, and crash-during-drain failover.
+
+The differential tests reuse test_serving.py's corpus and exact-equality
+helper: overlapped dispatch (futures parked, one batched device->host
+transfer per unit at drain) must produce BYTE-IDENTICAL results to
+independent execution -- the async rebuild may change scheduling, never
+bytes.  Schedules run on a VirtualClock, so nothing here sleeps on the
+wall clock and every replay is deterministic.
+"""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import CrashNode, Hang, QueryRejectedError, Transient
+from repro.engine import col, execute
+from repro.engine import serving
+from repro.engine.serving import TokenBucket, VirtualClock
+
+from test_serving import assert_identical, corpus, make_db, wave_rows
+
+
+@pytest.fixture(scope="module")
+def async_db():
+    return make_db()
+
+
+@pytest.fixture
+def transfer_meter(monkeypatch):
+    """Counts the drain stage's batched device->host transfers and flags
+    any stray per-member host sync: ``_shared_general`` is the only
+    serving code that still calls ``np.asarray`` on device arrays (the
+    pre-async collect path, kept for WOS/overflow fallbacks), so the
+    normal ROS path must never enter it."""
+    class Meter:
+        def __init__(self):
+            self.t0 = serving.device_transfer_count()
+            self.stray_syncs = []
+
+        def transfers(self):
+            return serving.device_transfer_count() - self.t0
+
+    meter = Meter()
+    real = serving.QueryService._shared_general
+
+    def spy(self, q, plan, cols, valid, es):
+        meter.stray_syncs.append(getattr(q, "table", "?"))
+        return real(self, q, plan, cols, valid, es)
+
+    monkeypatch.setattr(serving.QueryService, "_shared_general", spy)
+    return meter
+
+
+# ---------------------------------------------------------------------------
+# (a) differential byte-identity: overlapped == cooperative, ROS and WOS
+# ---------------------------------------------------------------------------
+
+def test_overlapped_differential_byte_identical_ros(async_db):
+    db = async_db
+    qs = corpus(db)
+    refs = [execute(db, q)[0] for q in qs]
+
+    svc = db.serve(queue_depth=len(qs) + 1, max_coalesce=4,
+                   max_concurrent=3, max_in_flight=8,
+                   clock=VirtualClock())
+    tickets = [svc.submit(q) for q in qs]
+    svc.drain()
+
+    for q, ref, t in zip(qs, refs, tickets):
+        assert_identical(ref, t.result(), label=str(t.id))
+    # the rebuild actually overlapped: units were parked in flight and
+    # each harvested flight cost exactly one batched transfer
+    assert svc.stats.async_units >= 1
+    assert svc.stats.drains == svc.stats.async_units
+    assert svc.stats.device_transfers == svc.stats.drains
+    assert any(t.stats.async_dispatch for t in tickets)
+    assert db.epochs.n_pinned() == 0
+
+
+def test_overlapped_differential_byte_identical_with_pending_wos():
+    """Same corpus with uncommitted-to-ROS WOS rows pending: members take
+    the side-scan (dispatch-time) path, selects still park device refs."""
+    db = make_db(waves=2, n_per_wave=800)
+    rng = np.random.default_rng(21)
+    t = db.begin()
+    db.insert(t, "sales", wave_rows(rng, 50_000, 300))
+    db.commit(t)                       # stays in WOS: no moveout
+
+    qs = corpus(db)
+    refs = [execute(db, q)[0] for q in qs]
+    svc = db.serve(queue_depth=len(qs) + 1, max_coalesce=len(qs),
+                   max_concurrent=2, clock=VirtualClock())
+    tickets = [svc.submit(q) for q in qs]
+    svc.drain()
+    for ref, t in zip(refs, tickets):
+        assert_identical(ref, t.result(), label=str(t.id))
+    assert db.epochs.n_pinned() == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: ONE device->host transfer per coalesced group, no stray syncs
+# ---------------------------------------------------------------------------
+
+def test_shared_collect_one_transfer_per_group(async_db, transfer_meter):
+    """The old collect path ran three ``np.asarray`` syncs per select
+    member; the drain stage batches every member of a coalesced group
+    into ONE ``jax.device_get``."""
+    db = async_db
+    q = db.query
+    selects = [
+        q("sales").where(col("day") == 33)
+        .select("sale_id", "cid", "price").to_ir(),
+        q("sales").where(col("day") == 33).select("sale_id", "qty").to_ir(),
+        q("sales").where((col("day") > 100) & (col("day") < 104))
+        .select("sale_id", "day", "price").to_ir(),
+        q("sales").select(margin=col("price") * col("qty"))
+        .where(col("day") == 200).to_ir(),
+    ]
+    refs = [execute(db, s)[0] for s in selects]
+
+    svc = db.serve(queue_depth=8, max_coalesce=8, max_concurrent=1,
+                   clock=VirtualClock())
+    tickets = [svc.submit(s) for s in selects]
+    svc.drain()
+
+    for ref, t in zip(refs, tickets):
+        assert_identical(ref, t.result(), label=str(t.id))
+    assert all(t.stats.share_group == len(selects) for t in tickets)
+    # one coalesced unit -> one flight -> one batched transfer
+    assert svc.stats.drains == 1
+    assert transfer_meter.transfers() == 1
+    assert transfer_meter.stray_syncs == []     # sync fallback never ran
+    assert db.epochs.n_pinned() == 0
+
+
+# ---------------------------------------------------------------------------
+# (b) bulkhead invariant: per-class in-flight never exceeds max_in_flight
+# ---------------------------------------------------------------------------
+
+def test_bulkhead_bounds_in_flight_under_flood(async_db):
+    db = async_db
+    caps = {"interactive": 3, "batch": 2}
+    svc = db.serve(queue_depth=64, max_coalesce=1, max_concurrent=8,
+                   max_in_flight=caps, clock=VirtualClock())
+    rng = np.random.default_rng(50)
+    q = db.query("sales").group_by("cid").agg(n=("*", "count")).to_ir()
+    tickets = []
+    for _ in range(50):
+        pr = "batch" if rng.random() < 0.5 else "interactive"
+        tickets.append(svc.submit(q, priority=pr))
+        svc.step()
+        for cls, cap in caps.items():
+            assert svc.in_flight(cls) <= cap, (cls, svc.in_flight(cls))
+    while svc.pending() or svc._inflight:
+        svc.step()
+        for cls, cap in caps.items():
+            assert svc.in_flight(cls) <= cap, (cls, svc.in_flight(cls))
+    assert svc.stats.completed == 50
+    # the flood actually pressed against the bulkheads
+    assert svc.stats.peak_in_flight.get("interactive", 0) >= 1
+    assert all(svc.stats.peak_in_flight.get(c, 0) <= cap
+               for c, cap in caps.items())
+    ref = execute(db, q)[0]
+    assert_identical(ref, tickets[0].result())
+    assert db.epochs.n_pinned() == 0
+
+
+# ---------------------------------------------------------------------------
+# (c) token bucket: refill/consume determinism + typed pin-free rejection
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(st.integers(1, 20), st.integers(1, 10),
+       st.lists(st.integers(0, 30), min_size=1, max_size=60))
+def test_token_bucket_deterministic_and_bounded(rate, burst, gaps):
+    """Two buckets fed the identical virtual-time schedule agree on
+    every decision; tokens stay within [0, burst]; total acceptances
+    never exceed burst + rate x elapsed (no token is minted twice)."""
+    c1, c2 = VirtualClock(), VirtualClock()
+    b1 = TokenBucket(rate, burst, clock=c1)
+    b2 = TokenBucket(rate, burst, clock=c2)
+    accepted = 0
+    for g in gaps:
+        dt = g * 0.1
+        c1.advance(dt)
+        c2.advance(dt)
+        r1, r2 = b1.try_consume(), b2.try_consume()
+        assert r1 == r2                       # deterministic replay
+        assert -1e-9 <= b1.tokens <= burst + 1e-9
+        accepted += r1
+    elapsed = sum(gaps) * 0.1
+    assert accepted <= burst + rate * elapsed + 1e-6
+
+
+def test_rate_limited_rejection_is_typed_and_never_pins():
+    db = make_db(waves=1, n_per_wave=400)
+    inj = db.enable_faults(seed=9)        # no rules: just count hits
+    clock = VirtualClock()
+    svc = db.serve(queue_depth=16, clock=clock)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+
+    s = svc.session("interactive", rate_limit=(1.0, 2.0))
+    accepted, rejected = [], []
+    for _ in range(5):                    # burst of 2, no time passes
+        try:
+            accepted.append(s.submit(q))
+        except QueryRejectedError as e:
+            assert e.reason.startswith("rate_limited")
+            rejected.append(e)
+    assert len(accepted) == 2 and len(rejected) == 3
+    assert svc.stats.rejected_rate_limited == 3
+    # a throttled submit never pinned: only the admitted queue holds pins
+    assert db.epochs.n_pinned() == len(accepted)
+    assert inj.hit_count("serving.rate_limit") == 3
+
+    clock.advance(1.5)                    # refill 1.5 tokens -> one more
+    accepted.append(s.submit(q))
+    with pytest.raises(QueryRejectedError):
+        s.submit(q)
+    svc.drain()
+    for t in accepted:
+        assert int(t.result()["n"][0]) == 400
+    assert db.epochs.n_pinned() == 0
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# (d) cost model: SMA pricing vs raw row counts, both directions
+# ---------------------------------------------------------------------------
+
+def _prices(db, q):
+    """(sma, raw) admission prices of q, read off a free-running serve."""
+    svc = db.serve(queue_depth=4)
+    t = svc.submit(q)
+    svc.drain()
+    t.result()
+    return t.stats.cost_bytes, svc._raw_working_set_bytes(t.plan,
+                                                          t.scan_need)
+
+
+def test_cost_model_rejects_padded_scan_raw_rows_would_admit():
+    """Fragmented store: every tiny trickle wave is its own container
+    whose single decoded block is block_rows lanes of mostly padding.
+    SMA pricing counts the blocks the scan will actually decode; raw row
+    counts see almost nothing."""
+    db = make_db(waves=6, n_per_wave=30, block_rows=256)
+    q = db.query("sales").group_by("cid").agg(n=("*", "count")).to_ir()
+    sma, raw = _prices(db, q)
+    assert sma > raw * 2, (sma, raw)     # padding dominates the true cost
+
+    ceiling = (raw + sma) // 2           # raw-priced admission would admit
+    svc = db.serve(queue_depth=4, max_cost_bytes=ceiling)
+    t = svc.submit(q)
+    svc.drain()
+    with pytest.raises(QueryRejectedError) as ei:
+        t.result()
+    assert "max_cost_bytes" in ei.value.reason
+    assert t.stats.rejected_reason == "cost"
+    assert svc.stats.rejected_cost == 1
+    assert raw <= ceiling                # the raw pricer WOULD have admitted
+    assert db.epochs.n_pinned() == 0
+
+
+def test_cost_model_admits_pruned_scan_raw_rows_would_reject():
+    """Heavily-pruned predicate: the sort column's SMAs eliminate almost
+    every block, so the SMA price is a fraction of the raw-row price --
+    admission keyed to raw rows would starve exactly the queries pruning
+    makes cheap."""
+    db = make_db(waves=3, n_per_wave=2000, block_rows=64)
+    q = db.query("sales").where(col("day") < 5).group_by("cid") \
+        .agg(n=("*", "count")).to_ir()
+    sma, raw = _prices(db, q)
+    assert sma * 2 < raw, (sma, raw)     # pruning made it cheap
+
+    ceiling = (sma + raw) // 2           # raw-priced admission would reject
+    svc = db.serve(queue_depth=4, max_cost_bytes=ceiling)
+    t = svc.submit(q)
+    svc.drain()
+    ref = execute(db, q)[0]
+    assert_identical(ref, t.result())    # admitted AND correct
+    assert raw > ceiling                 # the raw pricer would have refused
+    assert db.epochs.n_pinned() == 0
+
+
+def test_cheap_batch_query_boosted_into_interactive_queue():
+    db = make_db(waves=3, n_per_wave=2000, block_rows=64)
+    heavy = db.query("sales").group_by("cid").agg(s=("price", "sum")).to_ir()
+    cheap = db.query("sales").where(col("day") < 5).group_by("cid") \
+        .agg(n=("*", "count")).to_ir()
+    heavy_price, _ = _prices(db, heavy)
+    cheap_price, _ = _prices(db, cheap)
+    assert cheap_price < heavy_price
+    svc = db.serve(queue_depth=16, max_coalesce=1, max_concurrent=1,
+                   boost_cost_bytes=(cheap_price + heavy_price) // 2,
+                   clock=VirtualClock())
+    t_heavy = [svc.submit(heavy, priority="batch") for _ in range(3)]
+    t_cheap = svc.submit(cheap, priority="batch")
+    svc.drain()
+    assert t_cheap.stats.cost_boosted
+    assert svc.stats.cost_boosts == 1
+    # the boosted ticket jumped the batch queue it was submitted behind
+    assert t_cheap.stats.dispatch_seq < max(t.stats.dispatch_seq
+                                            for t in t_heavy)
+    assert db.epochs.n_pinned() == 0
+
+
+# ---------------------------------------------------------------------------
+# (e) crash during drain: fails over once, byte-identical
+# ---------------------------------------------------------------------------
+
+def test_drain_crash_fails_over_once_byte_identical():
+    db = make_db()
+    qs = corpus(db)[:6]
+    refs = [execute(db, q)[0] for q in qs]
+    inj = db.enable_faults(seed=11)
+    inj.on("serving.drain", CrashNode(node=2), hit=1)
+
+    svc = db.serve(queue_depth=len(qs) + 1, max_coalesce=len(qs),
+                   max_concurrent=2, clock=VirtualClock())
+    tickets = [svc.submit(q) for q in qs]
+    svc.drain()
+
+    for ref, t in zip(refs, tickets):
+        assert_identical(ref, t.result(), label=str(t.id))
+    # the crashed flight's members each failed over exactly once (the
+    # solo re-run replans onto buddies at the still-pinned epoch)
+    crashed = [t for t in tickets if t.stats.failovers]
+    assert crashed and all(t.stats.failovers == 1 for t in crashed)
+    assert inj.fired("serving.drain") == 1
+    assert db.epochs.n_pinned() == 0
+
+
+def test_drain_transient_exhaustion_rejects_typed():
+    db = make_db(waves=1, n_per_wave=400)
+    inj = db.enable_faults(seed=13)
+    inj.on("serving.drain", Transient(), times=inj.max_attempts)
+    svc = db.serve(queue_depth=8, max_coalesce=1, clock=VirtualClock())
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+    t = svc.submit(q)
+    svc.drain()
+    with pytest.raises(QueryRejectedError):
+        t.result()
+    assert t.stats.rejected_reason == "unavailable"
+    assert db.epochs.n_pinned() == 0
+    # budget consumed: the next query drains clean
+    t2 = svc.submit(q)
+    svc.drain()
+    assert int(t2.result()["n"][0]) == 400
+
+
+# ---------------------------------------------------------------------------
+# satellite: deterministic harness -- Hang advances virtual time, not wall
+# ---------------------------------------------------------------------------
+
+def test_hang_at_dispatch_and_drain_advances_virtual_clock_only():
+    db = make_db(waves=1, n_per_wave=400)
+    inj = db.enable_faults(seed=5)
+    inj.on("serving.dispatch", Hang(2.5), hit=1)
+    inj.on("serving.drain", Hang(1.25), hit=1)
+    clock = VirtualClock()
+    svc = db.serve(queue_depth=8, max_coalesce=1, clock=clock)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+
+    wall0 = time.time()
+    t = svc.submit(q)
+    svc.drain()
+    assert int(t.result()["n"][0]) == 400
+    # both hangs landed on the virtual clock...
+    assert clock.now() >= 3.75
+    assert t.stats.exec_s >= 1.25        # the drain hang is execution time
+    # ...and none of it was wall time (generous slack for real compute)
+    assert time.time() - wall0 < 2.0
+    assert db.epochs.n_pinned() == 0
+
+
+def test_virtual_clock_timeout_expiry_is_deterministic():
+    db = make_db(waves=1, n_per_wave=400)
+    clock = VirtualClock()
+    svc = db.serve(queue_depth=8, default_timeout_s=10.0, clock=clock)
+    q = db.query("sales").agg(n=("*", "count")).to_ir()
+    stale = svc.submit(q)
+    clock.advance(11.0)                  # exceeds the queue timeout
+    fresh = svc.submit(q)
+    svc.drain()
+    with pytest.raises(QueryRejectedError):
+        stale.result()
+    assert stale.stats.rejected_reason == "timeout"
+    assert int(fresh.result()["n"][0]) == 400
+    assert db.epochs.n_pinned() == 0
+
+
+def test_injection_point_registry_covers_async_serving():
+    from repro.core import INJECTION_POINTS
+    for pt in ("serving.dispatch", "serving.drain", "serving.rate_limit"):
+        assert pt in INJECTION_POINTS
