@@ -73,7 +73,7 @@ def main() -> None:
             "n_fact", "quick", "total_vertica_s", "total_baseline_s",
             "total_speedup", "total_cold_s", "total_warm_s",
             "warm_speedup_vs_cold", "total_frontend_s", "disk_ratio",
-            "segmented", "failover")}
+            "segmented", "failover", "compression")}
         bench["frontend_ms_per_query"] = {
             name: row.get("frontend_ms")
             for name, row in t3.get("queries", {}).items()}

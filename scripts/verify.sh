@@ -38,7 +38,15 @@ timeout "$T_FAST" python -m pytest -q -x -p no:cacheprovider \
     tests/test_locks.py \
     tests/test_faults.py \
     tests/test_serving.py \
-    tests/test_kernels_seg_preagg.py
+    tests/test_kernels_seg_preagg.py \
+    tests/test_kernels_bitunpack.py
+
+echo "== compression tier: packed-exec property tests + 20-query oracle =="
+# bit-packed storage round-trips and the compressed-domain execution path
+# (code-domain predicates, late materialization) must stay byte-identical
+# to the decoded scan -- DESIGN.md §9
+timeout "$T_FAST" python -m pytest -q -x -p no:cacheprovider \
+    tests/test_packed_exec.py
 
 echo "== docs tier: README/DESIGN snippets must run green =="
 timeout "$T_DOCS" python scripts/check_docs.py
@@ -78,6 +86,7 @@ timeout "$T_BENCH" python -m benchmarks.run --quick cstore_queries
 
 python - "$PREV" "$TOL" <<'EOF'
 import json
+import os
 import shutil
 import sys
 
@@ -86,6 +95,24 @@ cur = json.load(open("BENCH_cstore.json"))
 print(f"[verify] warm total {cur['total_warm_s']:.3f}s, "
       f"frontend {cur.get('total_frontend_s', 0)*1e3:.1f}ms, "
       f"speedup vs baseline {cur['total_speedup']:.2f}x")
+# compression gate (DESIGN.md §9): packed device bytes must stay well
+# under decoded bytes, and the budget-constrained warm total must keep
+# beating the decoded-resident baseline at the same cache budget
+comp = cur.get("compression") or {}
+pr = comp.get("packed_ratio")
+cs = comp.get("constrained_cache_speedup")
+pr_max = float(os.environ.get("PACKED_RATIO_MAX", "0.7"))
+cs_min = float(os.environ.get("CACHE_SPEEDUP_MIN", "1.2"))
+if pr is not None:
+    print(f"[verify] compression: packed/decoded {pr:.2f} "
+          f"(max {pr_max:.2f}), constrained-cache speedup {cs:.2f}x "
+          f"(min {cs_min:.2f}x)")
+    if pr > pr_max:
+        sys.exit(f"[verify] COMPRESSION REGRESSION: packed/decoded byte "
+                 f"ratio {pr:.2f} exceeds {pr_max:.2f}")
+    if cs is not None and cs < cs_min:
+        sys.exit(f"[verify] COMPRESSION REGRESSION: constrained-cache "
+                 f"speedup {cs:.2f}x below {cs_min:.2f}x")
 if not prev_path:
     print("[verify] no previous BENCH_cstore.json; quick baseline kept")
     sys.exit(0)

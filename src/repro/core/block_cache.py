@@ -20,7 +20,13 @@ where containers die --
                                    honest),
   * ``database.drop_partition`` -- dropped containers.
 
-Budget accounting is by device bytes; eviction is strict LRU.  The cache is
+Budget accounting is by device bytes; eviction is two-tier LRU: derived
+entries (decoded blocks, slabs, union scans) evict strictly LRU-first, and
+only when none remain do the *packed* ``KIND_ENCODED`` payloads go -- they
+are the compressed-domain executor's ground truth, typically 2-8x smaller
+than their decoded form, and everything else can be recomputed from them
+on device without another host upload (``protect_packed=False`` restores
+the flat LRU for baseline measurements).  The cache is
 deliberately jax-agnostic: values are opaque, sizes are passed in by the
 caller (engine/executor.py computes them from array shapes), so host-only
 storage code can import this module without pulling in jax.
@@ -67,9 +73,11 @@ class CacheStats:
 class BlockCache:
     """Byte-budgeted LRU of device-resident column blocks."""
 
-    def __init__(self, budget_bytes: int = 256 << 20):
+    def __init__(self, budget_bytes: int = 256 << 20, *,
+                 protect_packed: bool = True):
         assert budget_bytes > 0
         self.budget_bytes = int(budget_bytes)
+        self.protect_packed = protect_packed
         self.stats = CacheStats()
         # key -> (value, nbytes); insertion order == LRU order
         self._entries: "OrderedDict[CacheKey, Tuple[Any, int]]" = \
@@ -123,7 +131,13 @@ class BlockCache:
 
     def _evict_to_budget(self):
         while self.stats.bytes_in_use > self.budget_bytes and self._entries:
-            key, (_, nbytes) = self._entries.popitem(last=False)
+            key = next(iter(self._entries))          # LRU head
+            if self.protect_packed and key[2] == KIND_ENCODED:
+                # packed payloads go last: evict the LRU-first *derived*
+                # entry instead, if any derived entry remains
+                key = next((k for k in self._entries
+                            if k[2] != KIND_ENCODED), key)
+            _, nbytes = self._entries.pop(key)
             self.stats.bytes_in_use -= nbytes
             self.stats.evictions += 1
             keys = self._by_container.get(key[0])

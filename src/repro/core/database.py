@@ -158,6 +158,12 @@ class VerticaDB:
         # device-resident block cache, shared by every store of this DB
         # (our HBM analog of Vertica leaning on the OS page cache)
         self.block_cache = BlockCache(cache_budget_bytes)
+        # compressed-domain execution policy (engine/compressed.py):
+        #   "auto"       -- code-domain scan only when the decoded working
+        #                   set is not already device-resident
+        #   "compressed" -- always, when the plan is eligible
+        #   "decoded"    -- never (the legacy decode-then-filter scan)
+        self.exec_mode = "auto"
         # device mesh for the segmented executor (engine/segmented.py);
         # None = single-device execution
         self.mesh = None

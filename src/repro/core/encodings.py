@@ -14,7 +14,7 @@ Vertica's six encoding types, adapted for TPU-friendly fixed shapes:
 5. DELTA_RANGE       -- ("Compressed Delta Range") delta from the previous
                         value; best for many-valued sorted/range-bound data.
 6. COMMON_DELTA      -- ("Compressed Common Delta") dictionary of deltas +
-                        entropy-coded indexes; best for predictable sequences
+                        bit-packed indexes; best for predictable sequences
                         (timestamps, primary keys).
 (0. PLAIN            -- no encoding; the fallback.)
 
@@ -23,14 +23,31 @@ encodes when writing ROS containers.  Decode has two implementations:
 
 * ``decode()``      -- numpy, used by host-side storage management (mergeout).
 * ``decode_jnp()``  -- jnp with static shapes, used by the execution engine on
-                       device; the Pallas scan kernels fuse this decode with
-                       filtering/aggregation (kernels/rle_scan_agg.py).
+                       device; packed streams are unpacked by the bit-unpack
+                       kernel (kernels/bitunpack.py, dispatched via
+                       kernels/ops.py) fused with delta/dict reconstruction.
 
-Byte accounting (``storage_bytes``) models the *packed* size: integer payloads
-are charged at the narrowest {1,2,4,8}-byte width that fits, and COMMON_DELTA
-code streams are charged at their Shannon-entropy size (we model the entropy
-coder rather than implementing bit-IO; noted in DESIGN.md §9).  The in-memory
-numpy arrays may be wider; compression ratios reported by benchmarks use
+Packed storage is REAL (DESIGN.md §9): BLOCK_DICT codes, COMMON_DELTA code
+streams, and integer DELTA_VALUE / DELTA_RANGE deltas are stored as packed
+little-endian uint32 word streams at ``ceil(log2(domain))`` bits per symbol
+(``pack_words`` / ``unpack_words``).  Each group of 32 consecutive symbols
+occupies exactly ``width`` uint32 words (32*width bits), so a block of
+``block_rows`` symbols is ``ceil(block_rows/32) * width`` words and every
+bit offset within a group is static per width -- the device unpack is pure
+shift/mask with constant indices.  ``storage_bytes`` charges the actual
+``nbytes`` of the packed streams; variable-length per-block metadata (RLE
+runs, dictionary entries) is charged at its true occupied size -- the
+rectangular padding of the in-memory arrays exists only for fixed-shape
+device upload, like the SMA index it is not part of the disk image.
+Streams whose symbol width would exceed 32 bits (deltas spanning > 2^32)
+fall back to byte-wide storage, charged at actual nbytes.
+
+BLOCK_DICT additionally carries a container-global dictionary
+(``global_dict``) and a per-block code remap (``code_map``: block code ->
+global code), derived at encode time.  These enable compressed-domain
+execution: predicates rewritten to code ranges via dictionary binary
+search, and GROUP BY on a dict column using global codes directly as a
+dense domain.  Like the SMA they are derived indexes, not charged to
 ``storage_bytes``.
 
 Losslessness: every encoding must round-trip bit-exactly.  For FLOAT columns,
@@ -82,14 +99,75 @@ def _narrowest_int(min_value: int, max_value: int) -> np.dtype:
     return np.dtype(np.int64)
 
 
-def _entropy_bits(codes: np.ndarray) -> float:
-    """Shannon entropy (bits/symbol) of a code stream -- models the entropy
-    coder of COMMON_DELTA without implementing bit IO."""
-    if codes.size == 0:
-        return 0.0
-    _, counts = np.unique(codes, return_counts=True)
-    p = counts / counts.sum()
-    return float(-(p * np.log2(p)).sum())
+# ---------------------------------------------------------------------------
+# Bit-packing: little-endian uint32 word streams (DESIGN.md §9).
+#
+# Group format: symbols are processed in groups of 32.  A group of 32 w-bit
+# symbols is exactly 32*w bits = w uint32 words; symbol s of a group starts
+# at bit s*w, i.e. word (s*w)//32 bit (s*w)%32, possibly straddling into the
+# next word.  Because the group size equals the word width, the (word, shift)
+# pair for each of the 32 slots is a compile-time constant per width -- both
+# the XLA and Pallas unpack paths use static indices and shifts only.
+# ---------------------------------------------------------------------------
+
+MAX_PACK_BITS = 32
+
+
+def symbol_width(max_value: int) -> int:
+    """Bits per symbol for values in [0, max_value]: ceil(log2(domain)), >=1."""
+    return max(1, int(max_value).bit_length())
+
+
+def pack_words(symbols: np.ndarray, width: int) -> np.ndarray:
+    """Pack (n_blocks, block_rows) non-negative symbols < 2**width into
+    little-endian uint32 words, shape (n_blocks, ceil(block_rows/32)*width)."""
+    if not 1 <= width <= MAX_PACK_BITS:
+        raise ValueError(f"width {width} out of range 1..{MAX_PACK_BITS}")
+    nb, br = symbols.shape
+    ng = (br + 31) // 32
+    s = symbols.astype(np.uint64, copy=False)
+    if ng * 32 != br:
+        s = np.concatenate([s, np.zeros((nb, ng * 32 - br), np.uint64)],
+                           axis=1)
+    # bit-expand (LSB first per symbol), then packbits -> bytes -> words
+    shifts = np.arange(width, dtype=np.uint64)
+    bits = ((s[..., None] >> shifts) & np.uint64(1)).astype(np.uint8)
+    bits = bits.reshape(nb, ng, 32 * width)
+    packed = np.packbits(bits, axis=-1, bitorder="little")  # (nb, ng, 4*width)
+    words = np.ascontiguousarray(packed).view("<u4")
+    return words.reshape(nb, ng * width).astype(np.uint32, copy=False)
+
+
+def _slot_tables(width: int):
+    """Static per-slot (of 32) word index / shift tables for one width."""
+    slot = np.arange(32)
+    bit = slot * width
+    lo = bit // 32                      # word holding the symbol's low bits
+    sh = (bit % 32).astype(np.uint64)   # shift within that word
+    straddle = (bit % 32) + width > 32  # symbol continues into word lo+1
+    hi = np.minimum(lo + 1, width - 1)  # clipped: only read when straddling
+    hi_shift = ((32 - (bit % 32)) % 32).astype(np.uint64)
+    return lo, sh, hi, hi_shift, straddle
+
+
+def unpack_words(words: np.ndarray, width: int, block_rows: int) -> np.ndarray:
+    """Inverse of pack_words -> (n_blocks, block_rows) int64 symbols."""
+    nb, nw = words.shape
+    ng = max(1, nw // max(width, 1))
+    lo, sh, hi, hi_shift, straddle = _slot_tables(width)
+    g = words.reshape(nb, ng, width).astype(np.uint64)
+    vals = g[:, :, lo] >> sh
+    vals |= np.where(straddle, g[:, :, hi] << hi_shift, np.uint64(0))
+    mask = np.uint64((1 << width) - 1) if width < 64 else np.uint64(-1)
+    syms = (vals & mask).reshape(nb, ng * 32)[:, :block_rows]
+    return syms.astype(np.int64)
+
+
+def _packed_width(arrays: Dict[str, np.ndarray], key: str,
+                  block_rows: int) -> int:
+    """Recover the symbol width of a packed stream from its word count."""
+    ng = (block_rows + 31) // 32
+    return arrays[key].shape[1] // ng
 
 
 @dataclasses.dataclass
@@ -98,7 +176,10 @@ class EncodedColumn:
 
     ``arrays`` hold scheme-specific payloads; every array has leading dim
     ``n_blocks`` so the whole container is a stack of fixed-shape blocks
-    (TPU-friendly; see DESIGN.md hardware-adaptation table).
+    (TPU-friendly; see DESIGN.md hardware-adaptation table).  Packed streams
+    (``*_packed`` keys) are uint32 word streams; ``widths`` maps each packed
+    stream to its bits-per-symbol (part of the plan signature so dictionary
+    domain growth misses the plan cache correctly).
     """
 
     encoding: Encoding
@@ -108,11 +189,13 @@ class EncodedColumn:
     arrays: Dict[str, np.ndarray]
     # validity bitmap for SQL NULLs (None = column has no NULLs)
     valid: Optional[np.ndarray] = None
-    # modeled packed size in bytes (see module docstring)
+    # actual packed size in bytes (see module docstring)
     packed_bytes: float = 0.0
     # FLOAT_SCALED: the integer-encoded payload + decimal scale
     inner: Optional["EncodedColumn"] = None
     scale: float = 1.0
+    # bits per symbol for each packed stream in ``arrays``
+    widths: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def n_blocks(self) -> int:
@@ -123,6 +206,11 @@ class EncodedColumn:
         if self.valid is not None:
             b += self.n_rows / 8.0  # 1-bit validity bitmap
         return b
+
+    def width_signature(self) -> Tuple[Tuple[str, int], ...]:
+        """Hashable (stream, bits) pairs for plan signatures."""
+        inner = self.inner.width_signature() if self.inner is not None else ()
+        return tuple(sorted(self.widths.items())) + inner
 
     def decode(self) -> np.ndarray:
         """Round-trip decode to a flat 1-D numpy array of n_rows values."""
@@ -144,7 +232,8 @@ class EncodedColumn:
 
 
 # ---------------------------------------------------------------------------
-# Encoders.  All take a 1-D numpy array and return (arrays, packed_bytes).
+# Encoders.  All take a 1-D numpy array and return
+# (arrays, packed_bytes, widths).
 # ---------------------------------------------------------------------------
 
 def _encode_plain(values: np.ndarray, block_rows: int):
@@ -154,7 +243,7 @@ def _encode_plain(values: np.ndarray, block_rows: int):
     else:
         store_dt = values.dtype
     blocks = pad_to_blocks(values.astype(store_dt, copy=False), block_rows)
-    return {"values": blocks}, float(values.size * store_dt.itemsize)
+    return {"values": blocks}, float(blocks.nbytes), {}
 
 
 def _decode_plain(arrays, block_rows):
@@ -195,7 +284,7 @@ def _encode_rle(values: np.ndarray, block_rows: int):
         packed += rv.size * (val_bytes +
                              _narrowest_uint(int(rl.max()) if rl.size else 0).itemsize)
     return ({"run_values": run_values, "run_lengths": run_lengths,
-             "n_runs": n_runs}, packed)
+             "n_runs": n_runs}, packed, {})
 
 
 def _decode_rle(arrays, block_rows):
@@ -216,17 +305,24 @@ def _encode_delta_value(values: np.ndarray, block_rows: int):
     base = blocks.min(axis=1)
     deltas64 = blocks - base[:, None]
     dmax = int(deltas64.max()) if deltas64.size else 0
+    w = symbol_width(dmax)
+    if w <= MAX_PACK_BITS:
+        words = pack_words(deltas64, w)
+        return ({"base": base, "deltas_packed": words},
+                float(words.nbytes + base.nbytes), {"deltas_packed": w})
+    # deltas span more than 2^32: byte-wide fallback
     dt = _narrowest_uint(dmax)
-    # storage is BIT-packed per block (Vertica packs integers at the
-    # narrowest bit width, not byte width); in-memory arrays stay byte-wide
-    bits = max(1, int(np.ceil(np.log2(dmax + 1)))) if dmax else 1
     return ({"base": base, "deltas": deltas64.astype(dt)},
-            float(values.size * bits / 8 + base.size * 8))
+            float(deltas64.size * dt.itemsize + base.nbytes), {})
 
 
 def _decode_delta_value(arrays, block_rows):
-    return arrays["base"][:, None].astype(np.int64) + \
-        arrays["deltas"].astype(np.int64)
+    if "deltas_packed" in arrays:
+        w = _packed_width(arrays, "deltas_packed", block_rows)
+        deltas = unpack_words(arrays["deltas_packed"], w, block_rows)
+    else:
+        deltas = arrays["deltas"].astype(np.int64)
+    return arrays["base"][:, None].astype(np.int64) + deltas
 
 
 def _encode_block_dict(values: np.ndarray, block_rows: int):
@@ -235,23 +331,37 @@ def _encode_block_dict(values: np.ndarray, block_rows: int):
     nb = blocks.shape[0]
     uniq_per_block = [np.unique(b) for b in blocks]
     dict_size = max(u.size for u in uniq_per_block)
+    w = symbol_width(dict_size - 1)
     dict_values = np.zeros((nb, dict_size), dtype=values.dtype)
-    codes = np.zeros((nb, block_rows), dtype=_narrowest_uint(dict_size - 1))
+    codes = np.zeros((nb, block_rows), dtype=np.int64)
     dict_n = np.zeros(nb, dtype=np.int32)
+    # container-global dictionary + per-block remap: derived indexes that
+    # let the executor evaluate predicates and GROUP BY in the code domain
+    global_dict = np.unique(blocks)
+    code_map = np.zeros((nb, dict_size), dtype=np.int32)
     packed = 0.0
     for i, u in enumerate(uniq_per_block):
         dict_values[i, : u.size] = u
-        codes[i] = np.searchsorted(u, blocks[i]).astype(codes.dtype)
+        codes[i] = np.searchsorted(u, blocks[i])
         dict_n[i] = u.size
-        code_bits = max(1, int(np.ceil(np.log2(max(u.size, 2)))))
-        packed += u.size * values.dtype.itemsize + blocks.shape[1] * code_bits / 8
-    return ({"dict_values": dict_values, "codes": codes, "dict_n": dict_n},
-            packed)
+        code_map[i, : u.size] = np.searchsorted(global_dict, u)
+        packed += u.size * values.dtype.itemsize
+    words = pack_words(codes, w)
+    packed += words.nbytes + dict_n.nbytes
+    return ({"dict_values": dict_values, "codes_packed": words,
+             "dict_n": dict_n, "global_dict": global_dict,
+             "code_map": code_map},
+            packed, {"codes_packed": w})
 
 
 def _decode_block_dict(arrays, block_rows):
     dv = arrays["dict_values"]
-    out = np.take_along_axis(dv, arrays["codes"].astype(np.int64), axis=1)
+    if "codes_packed" in arrays:
+        w = _packed_width(arrays, "codes_packed", block_rows)
+        codes = unpack_words(arrays["codes_packed"], w, block_rows)
+    else:
+        codes = arrays["codes"].astype(np.int64)
+    out = np.take_along_axis(dv, codes, axis=1)
     return out.astype(np.int64 if np.issubdtype(dv.dtype, np.integer)
                       else np.float64)
 
@@ -262,31 +372,44 @@ def _encode_delta_range(values: np.ndarray, block_rows: int):
     first = blocks[:, 0].copy()
     deltas = np.diff(blocks, axis=1, prepend=first[:, None])
     if np.issubdtype(values.dtype, np.integer):
+        delta_min = deltas.min(axis=1)
+        rel = deltas - delta_min[:, None]
+        w = symbol_width(int(rel.max()) if rel.size else 0)
+        if w <= MAX_PACK_BITS:
+            words = pack_words(rel, w)
+            return ({"first": first, "delta_min": delta_min,
+                     "deltas_packed": words},
+                    float(words.nbytes + first.nbytes + delta_min.nbytes),
+                    {"deltas_packed": w})
         dt = _narrowest_int(int(deltas.min()), int(deltas.max()))
-        arrays = {"first": first, "deltas": deltas.astype(dt)}
-        packed = values.size * dt.itemsize + first.size * 8
-    else:
-        # floats: try float32 deltas; verify exact round-trip, else reject
-        d32 = deltas.astype(np.float32)
-        recon = first[:, None] + np.cumsum(d32.astype(np.float64), axis=1) \
-            - d32[:, :1].astype(np.float64)
-        if not np.array_equal(recon, blocks):
-            raise _Inexact()
-        arrays = {"first": first, "deltas": d32}
-        packed = values.size * 4 + first.size * 8
-    return arrays, float(packed)
+        return ({"first": first, "deltas": deltas.astype(dt)},
+                float(deltas.size * dt.itemsize + first.nbytes), {})
+    # floats: try float32 deltas; verify exact round-trip, else reject
+    d32 = deltas.astype(np.float32)
+    recon = first[:, None] + np.cumsum(d32.astype(np.float64), axis=1) \
+        - d32[:, :1].astype(np.float64)
+    if not np.array_equal(recon, blocks):
+        raise _Inexact()
+    return ({"first": first, "deltas": d32},
+            float(d32.nbytes + first.nbytes), {})
 
 
 def _decode_delta_range(arrays, block_rows):
-    d = arrays["deltas"].astype(
-        np.int64 if np.issubdtype(arrays["deltas"].dtype, np.integer)
-        else np.float64)
+    if "deltas_packed" in arrays:
+        w = _packed_width(arrays, "deltas_packed", block_rows)
+        rel = unpack_words(arrays["deltas_packed"], w, block_rows)
+        d = rel + arrays["delta_min"][:, None].astype(np.int64)
+    else:
+        d = arrays["deltas"].astype(
+            np.int64 if np.issubdtype(arrays["deltas"].dtype, np.integer)
+            else np.float64)
     first = arrays["first"][:, None].astype(d.dtype)
     return first + np.cumsum(d, axis=1) - d[:, :1]
 
 
 def _encode_common_delta(values: np.ndarray, block_rows: int):
-    # integer only: dictionary over the (few) distinct deltas, entropy-coded
+    # integer only: dictionary over the (few) distinct deltas + bit-packed
+    # code stream at ceil(log2(dict size)) bits per symbol
     blocks = pad_to_blocks(values, block_rows,
                            pad_value=values[-1] if values.size else 0)
     nb = blocks.shape[0]
@@ -294,23 +417,30 @@ def _encode_common_delta(values: np.ndarray, block_rows: int):
     deltas = np.diff(blocks, axis=1, prepend=first[:, None])
     uniq_per_block = [np.unique(d) for d in deltas]
     dict_size = max(u.size for u in uniq_per_block)
+    w = symbol_width(dict_size - 1)
     delta_dict = np.zeros((nb, dict_size), dtype=np.int64)
-    codes = np.zeros((nb, block_rows), dtype=_narrowest_uint(dict_size - 1))
+    codes = np.zeros((nb, block_rows), dtype=np.int64)
     dict_n = np.zeros(nb, dtype=np.int32)
     packed = 0.0
     for i, u in enumerate(uniq_per_block):
         delta_dict[i, : u.size] = u
-        codes[i] = np.searchsorted(u, deltas[i]).astype(codes.dtype)
+        codes[i] = np.searchsorted(u, deltas[i])
         dict_n[i] = u.size
-        packed += u.size * 8 + _entropy_bits(codes[i]) * block_rows / 8
-    packed += first.size * 8
-    return ({"first": first, "delta_dict": delta_dict, "codes": codes,
-             "dict_n": dict_n}, packed)
+        packed += u.size * 8
+    words = pack_words(codes, w)
+    packed += words.nbytes + first.nbytes + dict_n.nbytes
+    return ({"first": first, "delta_dict": delta_dict,
+             "codes_packed": words, "dict_n": dict_n},
+            packed, {"codes_packed": w})
 
 
 def _decode_common_delta(arrays, block_rows):
-    deltas = np.take_along_axis(arrays["delta_dict"],
-                                arrays["codes"].astype(np.int64), axis=1)
+    if "codes_packed" in arrays:
+        w = _packed_width(arrays, "codes_packed", block_rows)
+        codes = unpack_words(arrays["codes_packed"], w, block_rows)
+    else:
+        codes = arrays["codes"].astype(np.int64)
+    deltas = np.take_along_axis(arrays["delta_dict"], codes, axis=1)
     first = arrays["first"][:, None].astype(np.int64)
     return first + np.cumsum(deltas, axis=1) - deltas[:, :1]
 
@@ -394,11 +524,11 @@ def encode(values: np.ndarray, sql_type: SQLType,
             return _try_float_scaled(values, sql_type, n_rows, block_rows,
                                      valid)
         try:
-            arrays, packed = _ENCODERS[enc](values, block_rows)
+            arrays, packed, widths = _ENCODERS[enc](values, block_rows)
         except (_Inexact, ValueError, OverflowError):
             return None
         return EncodedColumn(enc, sql_type, n_rows, block_rows, arrays,
-                             valid, packed)
+                             valid, packed, widths=widths)
 
     if encoding == Encoding.AUTO:
         candidates = _INT_ENCODINGS if isint else _FLOAT_ENCODINGS
@@ -429,8 +559,10 @@ def upload_jnp(col: EncodedColumn) -> Dict[str, "object"]:
     """Upload the encoded payload arrays to device, once.  The returned
     dict can be kept in the block cache (core/block_cache.py) and handed
     back to ``decode_jnp(col, arrays=...)`` so repeat queries skip the
-    host->device copy entirely.  FLOAT_SCALED stores its payload on the
-    inner integer column, so that is what gets uploaded."""
+    host->device copy entirely.  Packed streams upload as uint32 words, so
+    the cache-resident footprint is the real packed size.  FLOAT_SCALED
+    stores its payload on the inner integer column, so that is what gets
+    uploaded."""
     import jax.numpy as jnp
 
     if col.encoding == Encoding.FLOAT_SCALED:
@@ -443,6 +575,14 @@ def device_bytes(arrays) -> int:
     if hasattr(arrays, "values") and not hasattr(arrays, "dtype"):
         return sum(int(v.size) * v.dtype.itemsize for v in arrays.values())
     return int(arrays.size) * arrays.dtype.itemsize
+
+
+def _unpack_jnp(a, col: EncodedColumn, key: str, base=None):
+    """Device bit-unpack of a packed stream via the kernel dispatcher."""
+    from ..kernels import ops as kops
+
+    w = col.widths.get(key) or _packed_width(col.arrays, key, col.block_rows)
+    return kops.bitunpack(a[key], w, col.block_rows, base=base)
 
 
 def decode_jnp(col: EncodedColumn, arrays=None):
@@ -472,22 +612,85 @@ def decode_jnp(col: EncodedColumn, arrays=None):
         run_idx = jnp.clip(run_idx, 0, a["run_values"].shape[1] - 1)
         return jnp.take_along_axis(a["run_values"], run_idx, axis=1)
     if enc == Encoding.DELTA_VALUE:
+        if "deltas_packed" in col.arrays:
+            # bit-unpack fused with the base-offset reconstruction
+            return _unpack_jnp(a, col, "deltas_packed",
+                               base=a["base"]).astype(jnp.int64)
         return a["base"][:, None].astype(jnp.int64) + \
             a["deltas"].astype(jnp.int64)
     if enc == Encoding.BLOCK_DICT:
-        return jnp.take_along_axis(a["dict_values"],
-                                   a["codes"].astype(jnp.int32), axis=1)
+        if "codes_packed" in col.arrays:
+            codes = _unpack_jnp(a, col, "codes_packed")
+        else:
+            codes = a["codes"].astype(jnp.int32)
+        return jnp.take_along_axis(a["dict_values"], codes, axis=1)
     if enc == Encoding.DELTA_RANGE:
-        isint = np.issubdtype(col.arrays["deltas"].dtype, np.integer)
-        d = a["deltas"].astype(jnp.int64 if isint else jnp.float64)
+        if "deltas_packed" in col.arrays:
+            d = _unpack_jnp(a, col, "deltas_packed",
+                            base=a["delta_min"]).astype(jnp.int64)
+        else:
+            isint = np.issubdtype(col.arrays["deltas"].dtype, np.integer)
+            d = a["deltas"].astype(jnp.int64 if isint else jnp.float64)
         first = a["first"][:, None].astype(d.dtype)
         return first + jnp.cumsum(d, axis=1) - d[:, :1]
     if enc == Encoding.COMMON_DELTA:
-        deltas = jnp.take_along_axis(a["delta_dict"],
-                                     a["codes"].astype(jnp.int32), axis=1)
+        if "codes_packed" in col.arrays:
+            codes = _unpack_jnp(a, col, "codes_packed")
+        else:
+            codes = a["codes"].astype(jnp.int32)
+        deltas = jnp.take_along_axis(a["delta_dict"], codes, axis=1)
         first = a["first"][:, None].astype(jnp.int64)
         return first + jnp.cumsum(deltas, axis=1) - deltas[:, :1]
     raise ValueError(f"cannot decode {enc}")
+
+
+# ---------------------------------------------------------------------------
+# Compressed-domain access helpers (executor late materialization).
+# ---------------------------------------------------------------------------
+
+def random_access_jnp(col: EncodedColumn) -> bool:
+    """True when single rows can be decoded on device without reconstructing
+    whole blocks (no cumsum / run expansion)."""
+    if col.encoding == Encoding.FLOAT_SCALED:
+        return random_access_jnp(col.inner)
+    if col.encoding in (Encoding.PLAIN, Encoding.DELTA_VALUE,
+                        Encoding.BLOCK_DICT):
+        return True
+    return False
+
+
+def gather_decode_jnp(col: EncodedColumn, a, b_idx, r_idx):
+    """Decode only the rows (block b_idx[i], row r_idx[i]) on device.
+
+    The late-materialization path: survivor positions from a code-domain
+    predicate gather straight out of the packed payload, so non-predicate
+    columns never materialize full blocks.  Only valid for encodings where
+    ``random_access_jnp`` is True."""
+    import jax.numpy as jnp
+
+    from ..kernels.bitunpack import gather_unpack
+
+    enc = col.encoding
+    if enc == Encoding.FLOAT_SCALED:
+        return gather_decode_jnp(col.inner, a, b_idx, r_idx) \
+            .astype(jnp.float32) / col.scale
+    if enc == Encoding.PLAIN:
+        return a["values"][b_idx, r_idx]
+    if enc == Encoding.DELTA_VALUE:
+        if "deltas_packed" in col.arrays:
+            w = _packed_width(col.arrays, "deltas_packed", col.block_rows)
+            d = gather_unpack(a["deltas_packed"], w, b_idx, r_idx)
+        else:
+            d = a["deltas"][b_idx, r_idx].astype(jnp.int32)
+        return (a["base"][b_idx].astype(jnp.int32) + d).astype(jnp.int64)
+    if enc == Encoding.BLOCK_DICT:
+        if "codes_packed" in col.arrays:
+            w = _packed_width(col.arrays, "codes_packed", col.block_rows)
+            codes = gather_unpack(a["codes_packed"], w, b_idx, r_idx)
+        else:
+            codes = a["codes"][b_idx, r_idx].astype(jnp.int32)
+        return a["dict_values"][b_idx, codes]
+    raise ValueError(f"{enc} is not randomly accessible on device")
 
 
 def choose_encoding_stats(values: np.ndarray) -> Dict[str, float]:

@@ -436,7 +436,7 @@ def _stores_have_wos(db: VerticaDB, plan) -> bool:
                for host, owner in plan.sources)
 
 
-def fused_plan_params(q, plan, stats=None
+def fused_plan_params(q, plan, stats=None, key_domains=None
                       ) -> Optional[Tuple[str, int, Tuple[int, ...]]]:
     """Static groupby algorithm + domain selection for a jit-compiled
     program: dense/packing need per-key domains from container SMAs;
@@ -445,7 +445,9 @@ def fused_plan_params(q, plan, stats=None
     domains)`` or None when the shape is outside the fused subset.
     Factored out so the dedicated fused path and the serving shared-scan
     path (engine/serving.py) make IDENTICAL choices -- the differential
-    byte-identity guarantee leans on this."""
+    byte-identity guarantee leans on this.  ``key_domains`` overrides the
+    plan's SMA-derived domains (the compressed-domain path groups dict
+    columns on union codes, whose domain is the dictionary size)."""
     if not (q.aggs or q.group_by):
         return None
     if any(j.how != "inner" for j in q.joins):
@@ -455,7 +457,8 @@ def fused_plan_params(q, plan, stats=None
         algo = "sort"
     domain, domains = 1, ()
     if q.group_by:
-        doms = plan.key_domains or (None,) * len(q.group_by)
+        doms = key_domains if key_domains is not None \
+            else (plan.key_domains or (None,) * len(q.group_by))
         if len(q.group_by) == 1:
             dom = doms[0]
             if algo == "dense" and (dom is None
@@ -540,24 +543,39 @@ def execute_fused_deferred(db: VerticaDB, q, plan, as_of: int, stats
     would.  Returns None when the shape is outside the fused subset."""
     if _stores_have_wos(db, plan):
         return None   # WOS rows need the unencoded side-scan
-    params = fused_plan_params(q, plan, stats)
+    proj = db.catalog.projections[plan.projection]
+    need = sorted(q.scan_columns(proj))
+    scan_pred = q.scan_predicate(proj.columns)
+
+    # plan-time code-domain rewrite (engine/compressed.py): predicates on
+    # dict columns become code ranges, group keys stay codes, payloads
+    # late-materialize for survivors only
+    from .compressed import plan_compressed_scan
+    cplan = plan_compressed_scan(db, q, plan, need, scan_pred, as_of)
+    params = fused_plan_params(q, plan, stats,
+                               key_domains=cplan.key_domains(q, plan)
+                               if cplan is not None else None)
     if params is None:
         return None
     algo, domain, domains = params
 
     br = db.block_rows
     sig = _plan_signature(db, q, plan, algo, domain, domains, br)
+    if cplan is not None:
+        sig = sig + cplan.sig_suffix
     if sig in _SORT_OVERFLOWED:
         return None   # known to exceed the sort cap: don't re-try
 
-    proj = db.catalog.projections[plan.projection]
-    need = sorted(q.scan_columns(proj))
-    scan_pred = q.scan_predicate(proj.columns)
-    scan = scan_stores_batched(db, plan, need, scan_pred, None, as_of,
-                               stats)
+    if cplan is not None:
+        scan = cplan.scan(db, scan_pred, None, stats)
+        stats.compressed_scan = scan is not None
+    else:
+        scan = scan_stores_batched(db, plan, need, scan_pred, None, as_of,
+                                   stats)
+        if scan is not None:
+            stats.rows_scanned = int(scan.valid.shape[0])
     if scan is None:
         return None   # fully pruned; pipeline builds the empty result
-    stats.rows_scanned = int(scan.valid.shape[0])
 
     # build sides host-side (small dims); the dim predicate filters here,
     # which is the SIP effect pushed all the way into the probe program
@@ -576,8 +594,9 @@ def execute_fused_deferred(db: VerticaDB, q, plan, as_of: int, stats
     res = fused(scan.columns, scan.valid, tuple(builds))
 
     def finish(host_res) -> Optional[Dict[str, np.ndarray]]:
-        return _shape_fused_result(q, host_res, algo, domain, domains,
-                                   stats, sigs=(sig,))
+        out = _shape_fused_result(q, host_res, algo, domain, domains,
+                                  stats, sigs=(sig,))
+        return cplan.translate(out) if cplan is not None else out
 
     return res, finish
 

@@ -170,6 +170,34 @@ def exact_int_interval(e: Expr):
     return (lhs.name, iv[0], iv[1]) if iv else None
 
 
+def interval_decompose(e: Expr
+                       ) -> Optional[Dict[str, Tuple[Optional[int],
+                                                     Optional[int]]]]:
+    """Exact multi-column decomposition: if ``e`` is a conjunction of
+    integer comparisons, each on a single column, return
+    ``{col: (lo, hi)}`` with INCLUSIVE bounds (None = open side); else
+    None.  The compressed-domain executor rewrites these intervals into
+    dictionary code ranges, so -- like ``exact_int_interval`` -- this must
+    be exact, not conservative; any untranslatable part rejects the whole
+    predicate."""
+    if not isinstance(e, BinOp):
+        return None
+    if e.op == "&":
+        a = interval_decompose(e.lhs)
+        b = interval_decompose(e.rhs)
+        if a is None or b is None:
+            return None
+        out = dict(a)
+        for c, (lo, hi) in b.items():
+            plo, phi = out.get(c, (None, None))
+            out[c] = (_tighter(plo, lo, max), _tighter(phi, hi, min))
+        return out
+    one = exact_int_interval(e)
+    if one is None:
+        return None
+    return {one[0]: (one[1], one[2])}
+
+
 def col(name: str) -> Col:
     return Col(name)
 

@@ -113,6 +113,12 @@ class ExecStats:
     plan_cache: str = ""            # "hit" / "miss" / "" (not attempted)
     block_cache_hits: int = 0
     block_cache_misses: int = 0
+    # compressed-domain execution telemetry (engine/compressed.py)
+    compressed_scan: bool = False   # code-domain scan + late materialization
+    rows_materialized: int = 0      # survivor rows actually decoded
+    # per-stage wall times of the segmented path (engine/segmented.py):
+    # slab_build / exchange_join / preagg / final_merge, in milliseconds
+    stage_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
     # segmented-execution telemetry (engine/segmented.py)
     segmented: bool = False
     n_shards: int = 0

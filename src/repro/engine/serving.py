@@ -707,17 +707,25 @@ class QueryService:
         return rows * (8 * max(len(need), 1) + 1)
 
     def _sma_cost_bytes(self, plan, need, bounds: Dict) -> int:
-        """SMA-priced working set: the decoded bytes the scan will
-        actually open.  Surviving ROS blocks are counted with the same
-        per-container SMA keep-mask the scan's pruning runs
-        (``ColumnSMA.prune_blocks`` against the predicate's bounds), at
-        FULL block granularity -- a decoded block is ``block_rows`` lanes
-        whether or not its tail is padding -- plus unpruned WOS rows.
+        """SMA-priced working set: the bytes the scan will actually open.
+        Two terms, matching what really lands in device memory:
+
+        * decoded lanes for surviving ROS blocks -- counted with the same
+          per-container SMA keep-mask the scan's pruning runs
+          (``ColumnSMA.prune_blocks`` against the predicate's bounds), at
+          FULL block granularity (a decoded block is ``block_rows`` lanes
+          whether or not its tail is padding) -- plus unpruned WOS rows;
+        * the REAL packed payload bytes of every needed column
+          (``EncodedColumn.packed_bytes``, the actual uint32 word streams
+          of DESIGN §9): that is the footprint the block cache holds
+          resident, whole-container, regardless of pruning.
+
         Pass empty bounds for a shared group: its one scan is unpruned
         by construction, so the union price carries no predicate."""
         db = self.db
         lane = 8 * max(len(need), 1) + 1
         rows = 0
+        packed = 0.0
         for host, owner in plan.sources:
             store = db.nodes[host].stores[owner]
             rows += store.wos.n_rows
@@ -730,7 +738,10 @@ class QueryService:
                     if colname in c.smas:
                         keep &= c.smas[colname].prune_blocks(lo, hi)
                 rows += int(keep.sum()) * db.block_rows
-        return rows * lane
+                for name in need:
+                    if name in c.columns:
+                        packed += c.columns[name].packed_bytes
+        return int(rows * lane + packed)
 
     def _scan_bounds(self, q, proj) -> Dict:
         sp = q.scan_predicate(proj.columns)

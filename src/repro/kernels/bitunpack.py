@@ -1,0 +1,148 @@
+"""Bit-unpack Pallas kernel: packed uint32 word streams -> int32 symbol lanes.
+
+Storage packs w-bit symbols (w = 1..32) into little-endian uint32 words with
+a group structure of 32 symbols per 32*w bits (core/encodings.py §9 format):
+symbol s of a group starts at bit s*w, i.e. word (s*w)//32 bit (s*w)%32,
+possibly straddling one word boundary.  Because a group is exactly w words,
+every slot's (word, shift) pair is a compile-time constant per width -- the
+kernel is 32 unrolled shift/mask lanes with static indices, no gather.
+
+Three implementations, dispatched by kernels/ops.py like seg_preagg:
+
+* ``bitunpack_pallas`` -- grid kernel, one (block, 512-row tile) per program,
+  optionally fused with the per-block base-offset add of the delta
+  reconstruction (DELTA_VALUE base / DELTA_RANGE delta_min).
+* ``bitunpack_xla``    -- shift/mask reference path, byte-identical on CPU.
+* ``gather_unpack``    -- random access: decode only (block, row) positions,
+  the late-materialization gather for surviving rows.
+
+TPU tiling note: the words tile's last dim is 16*w for a 512-row tile, a
+multiple of 128 for w in {8, 16, 24, 32}; other widths rely on relayout (or
+interpret mode off-TPU).  Symbols wider than 32 bits never reach here --
+encodings fall back to byte-wide storage.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_TILE_ROWS = 512
+
+
+def _mask32(width: int) -> int:
+    return (1 << width) - 1 if width < 32 else 0xFFFFFFFF
+
+
+def _slot_tables(width: int):
+    """Static per-slot (of 32) word index / shift tables for one width."""
+    slot = np.arange(32)
+    bit = slot * width
+    lo = bit // 32
+    sh = bit % 32
+    straddle = sh + width > 32
+    hi = np.minimum(lo + 1, width - 1)   # clipped: only read when straddling
+    hi_shift = (32 - sh) % 32
+    return lo, sh, hi, hi_shift, straddle
+
+
+def bitunpack_xla(words: jax.Array, width: int, block_rows: int,
+                  base: Optional[jax.Array] = None) -> jax.Array:
+    """XLA shift/mask unpack: words (nb, ng*width) uint32 ->
+    (nb, block_rows) int32; ``base`` (nb,) is added per block when given."""
+    nb, nw = words.shape
+    ng = nw // width
+    lo, sh, hi, hi_shift, straddle = _slot_tables(width)
+    g = words.reshape(nb, ng, width)
+    v = g[:, :, lo] >> jnp.asarray(sh, jnp.uint32)
+    hi_part = jnp.where(jnp.asarray(straddle),
+                        g[:, :, hi] << jnp.asarray(hi_shift, jnp.uint32),
+                        jnp.uint32(0))
+    v = (v | hi_part) & jnp.uint32(_mask32(width))
+    out = v.reshape(nb, ng * 32)[:, :block_rows].astype(jnp.int32)
+    if base is not None:
+        out = out + base[:, None].astype(jnp.int32)
+    return out
+
+
+def _unpack_block(g: jax.Array, width: int) -> jax.Array:
+    """(rows//32, width) uint32 words -> (rows,) uint32 symbols, unrolled."""
+    lo, sh, hi, hi_shift, straddle = _slot_tables(width)
+    mask = jnp.uint32(_mask32(width))
+    cols = []
+    for s in range(32):
+        v = g[:, lo[s]] >> jnp.uint32(sh[s])
+        if straddle[s]:
+            v = v | (g[:, hi[s]] << jnp.uint32(hi_shift[s]))
+        cols.append(v & mask)
+    return jnp.stack(cols, axis=1).reshape(-1)
+
+
+def _kernel(words_ref, out_ref, *, width, rows):
+    g = words_ref[...].reshape(rows // 32, width)
+    out_ref[...] = _unpack_block(g, width).astype(jnp.int32)[None, :]
+
+
+def _kernel_base(base_ref, words_ref, out_ref, *, width, rows):
+    g = words_ref[...].reshape(rows // 32, width)
+    syms = _unpack_block(g, width).astype(jnp.int32)[None, :]
+    out_ref[...] = syms + base_ref[...].astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "block_rows", "interpret"))
+def bitunpack_pallas(words: jax.Array, width: int, block_rows: int,
+                     base: Optional[jax.Array] = None, *,
+                     interpret: bool = False) -> jax.Array:
+    """Pallas grid unpack, fused with the per-block base add when given."""
+    nb, nw = words.shape
+    ng = nw // width
+    rows_padded = ng * 32
+    tile = _TILE_ROWS if rows_padded % _TILE_ROWS == 0 else rows_padded
+    nt = rows_padded // tile
+    tile_words = (tile // 32) * width
+    word_spec = pl.BlockSpec((1, tile_words), lambda i, j: (i, j))
+    out_spec = pl.BlockSpec((1, tile), lambda i, j: (i, j))
+    if base is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, width=width, rows=tile),
+            grid=(nb, nt),
+            in_specs=[word_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((nb, rows_padded), jnp.int32),
+            interpret=interpret,
+        )(words)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_base, width=width, rows=tile),
+            grid=(nb, nt),
+            in_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, 0)), word_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((nb, rows_padded), jnp.int32),
+            interpret=interpret,
+        )(base.reshape(nb, 1).astype(jnp.int32), words)
+    return out[:, :block_rows]
+
+
+def gather_unpack(words: jax.Array, width: int, b_idx: jax.Array,
+                  r_idx: jax.Array) -> jax.Array:
+    """Random-access unpack of symbols (b_idx[i], r_idx[i]) -> int32.
+
+    The late-materialization path: per-element dynamic word index + shift,
+    so survivor rows decode without touching the rest of the block."""
+    nw = words.shape[1]
+    r = r_idx.astype(jnp.uint32)
+    s = r % 32
+    bit = s * jnp.uint32(width)
+    lo = (r // 32) * jnp.uint32(width) + bit // 32
+    sh = bit % 32
+    w_lo = words[b_idx, lo]
+    w_hi = words[b_idx, jnp.minimum(lo + 1, jnp.uint32(nw - 1))]
+    straddle = (sh + jnp.uint32(width)) > 32
+    hi_shift = (jnp.uint32(32) - sh) % 32
+    v = (w_lo >> sh) | jnp.where(straddle, w_hi << hi_shift, jnp.uint32(0))
+    return (v & jnp.uint32(_mask32(width))).astype(jnp.int32)

@@ -13,12 +13,14 @@ kernels with no model changes.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
+from .bitunpack import bitunpack_pallas, bitunpack_xla
 from .delta_decode import delta_decode as _delta_decode
 from .flash_attention import flash_attention as _flash_attention
 from .hash_groupby import onehot_groupby as _onehot_groupby
@@ -29,6 +31,12 @@ from .sip_probe import semijoin_probe as _semijoin_probe
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pallas_enabled(env: str) -> bool:
+    """Single decode-kernel gate (mirrors kernels/seg_preagg.py): compiled
+    Pallas on TPU, opt-in interpret mode via env var, XLA path otherwise."""
+    return _on_tpu() or os.environ.get(env, "") == "pallas"
 
 
 def rle_filter_agg(run_values, run_lengths, *, lo, hi, force_ref=False):
@@ -58,10 +66,26 @@ def onehot_groupby(keys, values, *, domain, force_ref=False):
                            interpret=not _on_tpu())
 
 
+def bitunpack(words, width, block_rows, base=None, *, force_ref=False):
+    """Unpack w-bit symbols from packed uint32 words -> (nb, block_rows)
+    int32, optionally fused with a per-block base add (delta/dict
+    reconstruction).  See kernels/bitunpack.py for the word format."""
+    if force_ref:
+        return ref.bitunpack_ref(words, width, block_rows, base)
+    if _pallas_enabled("REPRO_BITUNPACK"):
+        return bitunpack_pallas(words, width, block_rows, base,
+                                interpret=not _on_tpu())
+    return bitunpack_xla(words, width, block_rows, base)
+
+
 def delta_decode(first, deltas, *, force_ref=False):
     if force_ref:
         return ref.delta_decode_ref(first, deltas)
-    return _delta_decode(first, deltas, interpret=not _on_tpu())
+    if _pallas_enabled("REPRO_DELTA_DECODE"):
+        return _delta_decode(first, deltas, interpret=not _on_tpu())
+    # XLA path (same math as the kernel body, byte-identical on CPU)
+    d = deltas.astype(jnp.float32)
+    return first.astype(jnp.float32) + jnp.cumsum(d, axis=1) - d[:, :1]
 
 
 def semijoin_probe(keys, build, *, force_ref=False):

@@ -95,6 +95,30 @@ def onehot_groupby_ref(keys: jax.Array, values: jax.Array,
     return jnp.stack([cnt, s], axis=-1)
 
 
+def bitunpack_ref(words, width: int, block_rows: int,
+                  base=None) -> jax.Array:
+    """Bit-by-bit oracle for the packed word-stream format
+    (kernels/bitunpack.py): symbol j of a block lives in group j//32 slot
+    j%32, starting at bit (j%32)*width of the group's width words.  Slow on
+    purpose -- an independent reimplementation, not shared shift tables."""
+    w = np.asarray(words, dtype=np.uint32)
+    nb, nw = w.shape
+    ng = nw // width
+    out = np.zeros((nb, block_rows), dtype=np.int64)
+    for b in range(nb):
+        for j in range(min(block_rows, ng * 32)):
+            g, s = divmod(j, 32)
+            v = 0
+            for i in range(width):
+                bit = s * width + i
+                word = int(w[b, g * width + bit // 32])
+                v |= ((word >> (bit % 32)) & 1) << i
+            out[b, j] = v
+    if base is not None:
+        out = out + np.asarray(base).astype(np.int64)[:, None]
+    return jnp.asarray(out.astype(np.int32))
+
+
 def delta_decode_ref(first: jax.Array, deltas: jax.Array) -> jax.Array:
     """DELTA_RANGE block decode: first (nb, 1), deltas (nb, B) ->
     values (nb, B) where v[0]=first, v[i]=v[i-1]+deltas[i]."""

@@ -35,13 +35,51 @@ class DesignReport:
     proposed: List[ProjectionDef]
     encoding_choices: Dict[str, Dict[str, str]]
     per_query: List[Tuple[str, float, float]]   # (desc, before_s, after_s)
+    sort_choices: Dict[str, Tuple[str, ...]] = \
+        dataclasses.field(default_factory=dict)
 
 
-def _candidates_for_query(db: VerticaDB, q: LogicalQuery
+SORT_SAMPLE_ROWS = 20_000
+
+
+def _sort_key_score(sample: Dict[str, np.ndarray],
+                    order: Tuple[str, ...], need: Sequence[str],
+                    types: Dict[str, SQLType],
+                    groupby_sets: Sequence[frozenset]
+                    ) -> Tuple[int, float]:
+    """Score one candidate sort key (paper §6.3).  Lower is better.
+
+    Primary term: how many workload group-by sets the key covers as a
+    sort-order prefix -- those queries aggregate sorted runs in one pass
+    instead of rebuilding a hash table.  Secondary term: actual encoded
+    bytes of a data sample laid out in that order (the phase-2 storage
+    experiment reused as a tie-breaker; better-clustered sort keys
+    RLE/delta-compress smaller).
+    """
+    if not sample or any(c not in sample for c in order):
+        return (0, float("inf"))
+    idx = np.lexsort(tuple(np.asarray(sample[c])
+                           for c in reversed(order)))
+    nbytes = 0.0
+    for c in need:
+        if c not in sample:
+            continue
+        enc = encode(np.asarray(sample[c])[idx],
+                     types.get(c, SQLType.INT))
+        nbytes += enc.storage_bytes
+    covered = sum(1 for g in groupby_sets if g <= set(order[:len(g)]))
+    return (-covered, nbytes)
+
+
+def _candidates_for_query(db: VerticaDB, q: LogicalQuery,
+                          groupby_sets: Sequence[frozenset] = (),
+                          sample: Optional[Dict[str, np.ndarray]] = None
                           ) -> List[ProjectionDef]:
     """Heuristic candidate enumeration (paper phase 1)."""
     table = db.catalog.tables[q.table].schema
     need = sorted(q.needed_columns() & set(table.column_names()))
+    types = {c.name: c.sql_type for c in table.columns}
+    gb_cols = set().union(*groupby_sets) if groupby_sets else set()
     cands = []
     sort_firsts = []
     if q.predicate is not None:
@@ -54,12 +92,22 @@ def _candidates_for_query(db: VerticaDB, q: LogicalQuery
             continue
         seen.add(first)
         rest = [c for c in need if c != first]
+        # candidate 2-column sort keys: the second column comes from the
+        # workload's group-by sets (falling back to the first remaining
+        # column); each is scored against the whole workload
+        seconds = [c for c in rest if c in gb_cols] or rest[:1]
+        orders = [(first, s) for s in seconds] or [(first,)]
+        if sample is not None and len(orders) > 1:
+            order = min(orders, key=lambda o: _sort_key_score(
+                sample, o, need, types, groupby_sets))
+        else:
+            order = orders[0]
         seg_cols = (q.joins[0].fact_key,) if q.joins else \
             ((first,) if not q.group_by else q.group_by)
         cands.append(ProjectionDef(
             name=f"{q.table}_dbd_{first}",
             anchor=q.table, columns=tuple([first] + rest),
-            sort_order=(first,) + tuple(rest[:1]),
+            sort_order=order,
             segmentation=SegmentationSpec("hash", tuple(
                 c for c in seg_cols if c in need) or (first,))))
     return cands
@@ -78,10 +126,21 @@ def design(db: VerticaDB, workload: Sequence, *,
         plan = plan_query(db, q)
         before.append(plan.estimated.total if plan.estimated else 0.0)
 
+    # workload-wide group-by sets + per-table samples drive 2-column
+    # sort-key scoring (paper §6.3)
+    groupby_sets = [frozenset(q.group_by) for q in workload if q.group_by]
+    samples: Dict[str, Dict[str, np.ndarray]] = {}
+    for q in workload:
+        if q.table not in samples:
+            rows = db.read_table(q.table)
+            samples[q.table] = {c: np.asarray(v)[:SORT_SAMPLE_ROWS]
+                                for c, v in rows.items()}
+
     # phase 1: propose, deploy tentatively, re-plan, keep what gets used
     proposals: Dict[str, ProjectionDef] = {}
     for q in workload:
-        for cand in _candidates_for_query(db, q):
+        for cand in _candidates_for_query(db, q, groupby_sets,
+                                          samples.get(q.table)):
             if cand.name not in proposals \
                     and cand.name not in db.catalog.projections:
                 proposals[cand.name] = cand
@@ -125,7 +184,9 @@ def design(db: VerticaDB, workload: Sequence, *,
             enc = encode(np.asarray(sample), SQLType.INT)
             choice[c] = enc.encoding.value
         enc_report[proj.name] = choice
-    return DesignReport(chosen, enc_report, per_query)
+    return DesignReport(chosen, enc_report, per_query,
+                        {p.name: p.sort_order
+                         for p in proposals.values()})
 
 
 def _drop_projection(db: VerticaDB, name: str):

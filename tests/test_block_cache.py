@@ -169,8 +169,16 @@ def test_mergeout_invalidates_retired_containers(sales_db):
 def test_small_budget_still_correct(sales_db):
     db, _ = sales_db
     db.block_cache.budget_bytes = 16_384     # far below the working set
-    cold, _ = execute(db, Q_AGG)
-    warm, st = execute(db, Q_AGG)
+    # pin the decode-then-filter path: under "auto" a budget this tight
+    # takes the compressed scan, whose packed working set FITS -- no
+    # eviction pressure to exercise (that's engine/compressed.py's win,
+    # tested in test_packed_exec.py; here we want the LRU machinery)
+    db.exec_mode = "decoded"
+    try:
+        cold, _ = execute(db, Q_AGG)
+        warm, st = execute(db, Q_AGG)
+    finally:
+        db.exec_mode = "auto"
     _assert_same(cold, warm)
     assert db.block_cache.stats.bytes_in_use <= 16_384
     assert db.block_cache.stats.evictions > 0
